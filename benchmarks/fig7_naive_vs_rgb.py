@@ -1,0 +1,57 @@
+"""Paper Figure 7: optimized-RGB speedup over NaiveRGB (kernel time only).
+
+The divergence the paper's Fig. 1 illustrates is emulated exactly by the
+vmap'd naive solver (cond -> select: every problem pays every re-solve);
+the cooperative solver skips re-solves whenever a whole tile is
+satisfied.  Also reports the randomisation ablation on the adversarial
+ordering (worst-case O(m^2) -> expected O(m))."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core import (adversarial_lp, normalize_batch,
+                        random_feasible_lp, shuffle_batch, solve_batch_lp)
+
+
+VARIANTS = (
+    # (label, solver kwargs) — block-size/chunk tuning (paper section 5:
+    # "tailoring block sizes to the expected LP size")
+    ("rgb-t32", dict(tile=32, chunk=0)),        # paper-faithful warp tile
+    ("rgb-t32-c64", dict(tile=32, chunk=64)),   # + chunked re-solve
+    ("rgb-t8-c64", dict(tile=8, chunk=64)),     # + small cooperative tile
+)
+
+
+def run(full: bool = False):
+    rows = []
+    sizes = (32, 128, 512, 2048) if full else (32, 256)
+    B = 1024
+    for m in sizes:
+        lp = shuffle_batch(jax.random.key(4), normalize_batch(
+            random_feasible_lp(jax.random.key(m), B, m)))
+        f = jax.jit(lambda L: solve_batch_lp(L, method="naive",
+                                             normalize=False))
+        t_naive = time_fn(f, lp)
+        rows.append(emit(f"fig7/b{B}/m{m}/naive", t_naive, ""))
+        for label, kw in VARIANTS:
+            f = jax.jit(lambda L, kw=kw: solve_batch_lp(
+                L, method="rgb", normalize=False, **kw))
+            t = time_fn(f, lp)
+            rows.append(emit(f"fig7/b{B}/m{m}/{label}", t,
+                             f"over_naive={t_naive/t:.2f}x"))
+
+    # randomisation ablation (Seidel's expected-O(m) claim)
+    m = 512 if full else 128
+    adv = normalize_batch(adversarial_lp(256, m))
+    f = jax.jit(lambda L: solve_batch_lp(L, method="rgb", normalize=False))
+    t_adv = time_fn(f, adv)
+    shuf = shuffle_batch(jax.random.key(0), adv)
+    t_shuf = time_fn(f, shuf)
+    rows.append(emit(f"fig7/adversarial/m{m}", t_shuf,
+                     f"shuffle_speedup={t_adv/t_shuf:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

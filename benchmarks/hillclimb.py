@@ -1,0 +1,60 @@
+"""Perf hillclimb driver (EXPERIMENTS.md section Perf).
+
+Re-runs the three selected (arch x shape) cells with the optimisation
+variants and records them under distinct ``variant`` keys next to the
+baseline records in dryrun.json:
+
+  * granite-8b x train_4k  — most collective-bound train cell.
+      variant ``vma-transpose``: check_rep=True (vma-tracked shard_map:
+      the conservative psum-transposes in backward disappear).
+  * granite-8b x decode_32k — worst roofline fraction among serve cells.
+      variant ``weight-resident``: serving keeps the TP weight shard in
+      HBM instead of FSDP-gathering per token.
+  * arctic-480b x train_4k — the flagship MoE (the paper-representative
+      large-batch cell: EP via replicated activations + psum).
+      variant ``vma-transpose``.
+
+Run AFTER the baseline sweep (shares dryrun.json):
+
+    PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+# NOTE: must run in its own process - forces 512 host devices via dryrun.
+from repro.launch.dryrun import dryrun_cell, RESULTS_DIR  # noqa: E402
+
+import json
+from pathlib import Path
+
+CELLS = [
+    ("granite-8b", "train_4k", "vma-transpose", {"check_rep": True}),
+    ("granite-8b", "decode_32k", "weight-resident",
+     {"weight_resident": True}),
+    # arctic: check_rep=True produces WRONG MoE grads (vma x scatter bug,
+    # see tests) — its optimization is the fused MoE+dense residual psum,
+    # which is now the default code path; re-probing records it.
+    ("arctic-480b", "train_4k", "fused-psum", {"weight_resident": False}),
+    ("arctic-480b", "decode_32k", "fused-psum", {"weight_resident": False}),
+    ("internlm2-20b", "train_4k", "vma-transpose", {"check_rep": True}),
+]
+
+
+def main():
+    out = RESULTS_DIR / "dryrun.json"
+    existing = json.loads(out.read_text()) if out.exists() else []
+    keyed = {(r["arch"], r["shape"], r.get("multi_pod", False),
+              r.get("variant", "baseline")): r for r in existing}
+    import traceback
+    for arch, shape, variant, kw in CELLS:
+        try:
+            rec = dryrun_cell(arch, shape, multi_pod=False, probe=True,
+                              step_kwargs=kw, variant=variant)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "multi_pod": False,
+                   "variant": variant, "status": "FAIL", "error": repr(e)}
+        keyed[(arch, shape, False, variant)] = rec
+    out.write_text(json.dumps(list(keyed.values()), indent=1))
+    print(f"hillclimb variants written -> {out}")
+
+
+if __name__ == "__main__":
+    main()

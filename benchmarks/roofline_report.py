@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md tables from benchmarks/results/dryrun.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun.json"
+
+
+def fmt_t(s):
+    if s is None:
+        return "-"
+    return f"{s*1e3:.1f}ms" if s < 10 else f"{s:.2f}s"
+
+
+def main():
+    all_recs = json.loads(RESULTS.read_text())
+    variants = [r for r in all_recs
+                if r.get("variant", "baseline") != "baseline"]
+    recs = [r for r in all_recs
+            if r.get("variant", "baseline") == "baseline"]
+    single = [r for r in recs if not r.get("multi_pod")]
+    multi = [r for r in recs if r.get("multi_pod")]
+
+    print("### Dry-run status (all cells must compile)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | compile_s (1pod/2pod) |")
+    print("|---|---|---|---|---|")
+    by_key = {(r["arch"], r["shape"], r.get("multi_pod", False)): r
+              for r in recs}
+    archs = sorted({r["arch"] for r in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    n_ok = n_skip = n_fail = 0
+    for a in archs:
+        for s in shapes:
+            r1 = by_key.get((a, s, False), {})
+            r2 = by_key.get((a, s, True), {})
+            st1, st2 = r1.get("status", "?"), r2.get("status", "?")
+            for st in (st1, st2):
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "FAIL"
+            print(f"| {a} | {s} | {st1} | {st2} | "
+                  f"{r1.get('compile_s','-')}/{r2.get('compile_s','-')} |")
+    print(f"\nok={n_ok} skipped={n_skip} FAILED={n_fail}\n")
+
+    print("### Roofline (single-pod 16x16, per-device terms)\n")
+    print("| arch | shape | t_compute | t_memory(fused) | t_mem(unfused) "
+          "| t_collective | bottleneck | useful | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        f = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {fmt_t(f['t_compute_s'])} | "
+              f"{fmt_t(f['t_memory_s'])} | "
+              f"{fmt_t(f.get('t_memory_unfused_s'))} | "
+              f"{fmt_t(f['t_collective_s'])} | {f['bottleneck']} | "
+              f"{f['useful_ratio']:.3f} | {f['roofline_fraction']:.3f} |")
+
+    if variants:
+        print("\n### Perf variants (baseline vs optimized, single pod)\n")
+        print("| arch | shape | variant | t_coll base->opt | "
+              "frac base->opt | verdict |")
+        print("|---|---|---|---|---|---|")
+        base = {(r["arch"], r["shape"]): r for r in single
+                if r.get("roofline")}
+        for r in variants:
+            if r.get("status") != "ok" or "roofline" not in r:
+                print(f"| {r['arch']} | {r['shape']} | "
+                      f"{r.get('variant')} | - | - | FAILED |")
+                continue
+            b = base.get((r["arch"], r["shape"]))
+            if not b:
+                continue
+            bf, of = b["roofline"], r["roofline"]
+            verdict = ("confirmed" if of["roofline_fraction"] >
+                       bf["roofline_fraction"] * 1.05 else
+                       "refuted" if of["roofline_fraction"] <
+                       bf["roofline_fraction"] * 0.95 else "neutral")
+            print(f"| {r['arch']} | {r['shape']} | {r['variant']} | "
+                  f"{fmt_t(bf['t_collective_s'])} -> "
+                  f"{fmt_t(of['t_collective_s'])} | "
+                  f"{bf['roofline_fraction']:.3f} -> "
+                  f"{of['roofline_fraction']:.3f} | {verdict} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``python -m benchmarks.run``          quick pass (CI-sized)
+``python -m benchmarks.run --full``   full sweep (paper-sized grids)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure names (fig3..fig7)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_lp_size, fig4_batch, fig5_transfer,
+                            fig6_reduction, fig7_naive_vs_rgb)
+    figs = {
+        "fig3": fig3_lp_size.run,
+        "fig4": fig4_batch.run,
+        "fig5": fig5_transfer.run,
+        "fig6": fig6_reduction.run,
+        "fig7": fig7_naive_vs_rgb.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(figs)
+    print("name,us_per_call,derived")
+    for name, fn in figs.items():
+        if name in only:
+            fn(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""End-to-end training example with the paper's solver inside the
+optimizer: every step solves a batch of per-parameter-block 2-D LPs that
+pick a trust-region-safe update scale (optim/lp_clip.py).
+
+    PYTHONPATH=src python examples/lp_constrained_training.py
+"""
+from repro.launch.train import main as train_main
+
+
+def main():
+    print("== baseline (plain AdamW) ==")
+    loss_a = train_main([
+        "--arch", "qwen1.5-0.5b", "--smoke", "--steps", "40",
+        "--batch", "8", "--seq", "64", "--lr", "3e-3",
+        "--log-every", "10"])
+    print("== LP-constrained updates (batch 2-D LP per block/step) ==")
+    loss_b = train_main([
+        "--arch", "qwen1.5-0.5b", "--smoke", "--steps", "40",
+        "--batch", "8", "--seq", "64", "--lr", "3e-3", "--lp-clip",
+        "--log-every", "10"])
+    print(f"final losses: adamw={loss_a:.4f}  lp-clipped={loss_b:.4f}")
+    print("(at an aggressive lr the LP trust region keeps early steps "
+          "bounded; lp_s1 < 1 in the logs shows the constraint binding)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""End-to-end LM training driver example (deliverable (b): train a model
+for a few hundred steps).
+
+On this CPU container it trains the reduced config; on a TPU pod drop
+--smoke and add --production-mesh for the 16x16 layout.  Checkpoints are
+mesh-independent: the same directory restores onto any mesh.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    args = [
+        "--arch", "qwen1.5-0.5b", "--smoke",
+        "--steps", "200", "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_train_lm",
+        "--ckpt-every", "50", "--log-every", "20",
+        "--heartbeat", "/tmp/repro_train_lm/heartbeat.json",
+    ]
+    loss = train_main(args + sys.argv[1:])
+    assert loss < 5.0, f"training did not make progress: {loss}"
+    print(f"trained to loss {loss:.4f}; checkpoint in /tmp/repro_train_lm "
+          f"(re-run this script: it resumes from the checkpoint)")
+
+
+if __name__ == "__main__":
+    main()

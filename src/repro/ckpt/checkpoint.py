@@ -1,0 +1,163 @@
+"""Mesh-independent checkpointing with async save and atomic commit.
+
+Layout (one directory per step):
+
+    <root>/step_000042/
+        manifest.json     # step, flat param paths, shapes, dtypes, meta
+        <path>.npy        # one .npy per leaf (paths are slash-joined)
+    <root>/LATEST         # atomically-updated pointer file
+
+Properties needed at cluster scale:
+  * **mesh independence** — leaves are saved as full logical arrays
+    (gathered), so a restart may use a different mesh/topology: load()
+    just feeds `jax.device_put(leaf, NamedSharding(new_mesh, spec))`
+    (elastic rescaling).  Parameter shapes are mesh-independent by
+    construction (models.common.CANONICAL_TP).
+  * **atomicity** — writes go to `step_N.tmp/` and are renamed into
+    place; the LATEST pointer is updated last via atomic rename.  A crash
+    mid-save never corrupts the previous checkpoint (restart-safe).
+  * **async** — save() returns immediately; a daemon thread serialises.
+    wait() joins (called before the next save or at exit).
+  * the data-pipeline cursor and RNG state ride along in the manifest,
+    so restart resumes the exact token stream.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}" if prefix else str(i)))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any], like):
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else k, v)
+                    for k, v in node.items()}
+        if isinstance(node, (tuple, list)):
+            vals = [rec(f"{prefix}/{i}" if prefix else str(i), v)
+                    for i, v in enumerate(node)]
+            if hasattr(node, "_fields"):  # NamedTuple
+                return type(node)(*vals)
+            return type(node)(vals)
+        return flat[prefix]
+    return rec("", like)
+
+
+class Checkpointer:
+    def __init__(self, root: str | Path, keep: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, params, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        """Snapshot (device->host copy happens HERE, synchronously cheap);
+        disk IO happens on the daemon thread unless blocking=True."""
+        self.wait()
+        flat = _flatten(params)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        meta = {"step": step, "extra": extra or {},
+                "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                           for k, v in host.items()}}
+
+        def work():
+            self._write(step, host, meta)
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _write(self, step: int, host: Dict[str, np.ndarray], meta: Dict):
+        final = self.root / f"step_{step:08d}"
+        tmp = self.root / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        for k, v in host.items():
+            fp = tmp / (k.replace("/", "__") + ".npy")
+            np.save(fp, v)
+        (tmp / "manifest.json").write_text(json.dumps(meta))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # atomic LATEST pointer
+        ptr = self.root / "LATEST.tmp"
+        ptr.write_text(final.name)
+        os.rename(ptr, self.root / "LATEST")
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(p for p in self.root.glob("step_????????")
+                       if p.is_dir())
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- load ---------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        ptr = self.root / "LATEST"
+        if not ptr.exists():
+            return None
+        name = ptr.read_text().strip()
+        if not (self.root / name / "manifest.json").exists():
+            return None
+        return int(name.split("_")[1])
+
+    def load(self, like, step: Optional[int] = None,
+             shardings=None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``like``; if ``shardings`` (a
+        matching tree of NamedSharding) is given, leaves are device_put
+        with it — this is where elastic re-sharding onto a NEW mesh
+        happens."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        d = self.root / f"step_{step:08d}"
+        meta = json.loads((d / "manifest.json").read_text())
+        flat_like = _flatten(like)
+        flat_sh = _flatten(shardings) if shardings is not None else None
+        out = {}
+        for k, ref in flat_like.items():
+            arr = np.load(d / (k.replace("/", "__") + ".npy"))
+            if arr.dtype.kind == "V":
+                # numpy round-trips ml_dtypes (bfloat16 etc.) as void;
+                # reinterpret via the dtype recorded in the manifest
+                import ml_dtypes  # noqa: F401
+                arr = arr.view(np.dtype(meta["leaves"][k]["dtype"]))
+            if hasattr(ref, "dtype") and arr.dtype != ref.dtype:
+                arr = arr.astype(ref.dtype)
+            if flat_sh is not None:
+                out[k] = jax.device_put(arr, flat_sh[k])
+            else:
+                out[k] = jax.numpy.asarray(arr)
+        return _unflatten(out, like), meta["extra"]

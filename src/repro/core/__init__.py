@@ -1,0 +1,22 @@
+"""Core batch 2-D LP library (the paper's contribution, in JAX)."""
+from repro.core.lp import (
+    LPBatch,
+    LPSolution,
+    adversarial_lp,
+    infeasible_lp,
+    make_batch,
+    normalize_batch,
+    pad_batch,
+    ragged_feasible_lp,
+    random_feasible_lp,
+    replicated_lp,
+    shuffle_batch,
+)
+from repro.core.seidel import solve_batch_lp, solve_naive, solve_rgb
+
+__all__ = [
+    "LPBatch", "LPSolution", "adversarial_lp", "infeasible_lp", "make_batch",
+    "normalize_batch", "pad_batch", "ragged_feasible_lp", "random_feasible_lp",
+    "replicated_lp", "shuffle_batch", "solve_batch_lp", "solve_naive",
+    "solve_rgb",
+]

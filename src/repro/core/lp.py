@@ -1,0 +1,197 @@
+"""Problem types, generators and batch utilities for 2-D linear programs.
+
+A single LP is   maximize  c @ x   subject to  A @ x <= b,  x in R^2.
+
+Batches are stored dense:  A (B, m, 2), b (B, m), c (B, 2).  Ragged batches
+(the paper's "different-sized individual LPs within the batches") carry a
+per-problem valid count ``m_valid`` and pad the tail with the *neutral
+constraint* ``0*x + 0*y <= 1`` which is satisfied by every point and ignored
+by the 1-D re-solve (its normal has zero norm).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Neutral padding constraint: 0*x <= 1 (always satisfied, zero normal).
+PAD_A = (0.0, 0.0)
+PAD_B = 1.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LPBatch:
+    """A batch of 2-D linear programs (dense layout, optionally ragged)."""
+
+    A: jax.Array  # (B, m, 2) constraint normals
+    b: jax.Array  # (B, m)    constraint offsets
+    c: jax.Array  # (B, 2)    objective directions (maximize)
+    m_valid: jax.Array  # (B,) int32 number of valid (non-padding) rows
+
+    @property
+    def batch(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.A.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LPSolution:
+    x: jax.Array  # (B, 2) argmax (garbage where infeasible)
+    feasible: jax.Array  # (B,) bool
+    objective: jax.Array  # (B,) c @ x (garbage where infeasible)
+
+
+def make_batch(A, b, c, m_valid=None) -> LPBatch:
+    A = jnp.asarray(A)
+    b = jnp.asarray(b)
+    c = jnp.asarray(c)
+    if A.ndim == 2:  # single problem -> batch of one
+        A, b, c = A[None], b[None], c[None]
+    B, m = A.shape[0], A.shape[1]
+    if m_valid is None:
+        m_valid = jnp.full((B,), m, dtype=jnp.int32)
+    else:
+        m_valid = jnp.asarray(m_valid, dtype=jnp.int32)
+    return LPBatch(A=A, b=b, c=c, m_valid=m_valid)
+
+
+def pad_batch(batch: LPBatch, m_pad: int) -> LPBatch:
+    """Pad the constraint dimension up to ``m_pad`` with neutral rows."""
+    B, m = batch.batch, batch.m
+    if m_pad < m:
+        raise ValueError(f"m_pad={m_pad} < m={m}")
+    if m_pad == m:
+        return batch
+    dt = batch.A.dtype
+    padA = jnp.broadcast_to(jnp.asarray(PAD_A, dt), (B, m_pad - m, 2))
+    padb = jnp.full((B, m_pad - m), PAD_B, dt)
+    return LPBatch(
+        A=jnp.concatenate([batch.A, padA], axis=1),
+        b=jnp.concatenate([batch.b, padb], axis=1),
+        c=batch.c,
+        m_valid=batch.m_valid,
+    )
+
+
+def normalize_batch(batch: LPBatch, eps: float = 1e-30) -> LPBatch:
+    """Scale every constraint so ||a_h|| = 1 (zero-norm padding rows kept).
+
+    Normalisation makes every epsilon threshold in the solver an absolute
+    distance, which is what keeps float32 behaviour within the paper's own
+    5-significant-figure tolerance.
+    """
+    n = jnp.linalg.norm(batch.A, axis=-1, keepdims=True)  # (B, m, 1)
+    is_pad = n[..., 0] < eps
+    scale = jnp.where(is_pad[..., None], 1.0, 1.0 / jnp.maximum(n, eps))
+    return LPBatch(
+        A=batch.A * scale,
+        b=batch.b * scale[..., 0],
+        c=batch.c,
+        m_valid=batch.m_valid,
+    )
+
+
+def shuffle_batch(key: jax.Array, batch: LPBatch) -> LPBatch:
+    """Random per-problem constraint order — the R in RGB (Seidel's
+    randomisation).  Valid rows are permuted uniformly; padding rows stay at
+    the tail so ragged masks remain prefix masks."""
+    B, m = batch.batch, batch.m
+    scores = jax.random.uniform(key, (B, m))
+    idx = jnp.arange(m)[None, :]
+    scores = jnp.where(idx < batch.m_valid[:, None], scores, jnp.inf)
+    order = jnp.argsort(scores, axis=-1)  # (B, m)
+    take = jax.vmap(lambda a, o: a[o])
+    return LPBatch(
+        A=take(batch.A, order), b=take(batch.b, order), c=batch.c,
+        m_valid=batch.m_valid,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Problem generators (mirroring the paper's experimental setup, section 4)
+# ---------------------------------------------------------------------------
+
+def random_feasible_lp(
+    key: jax.Array,
+    batch: int,
+    m: int,
+    *,
+    dtype=jnp.float32,
+    radius: float = 100.0,
+    slack: float = 5.0,
+) -> LPBatch:
+    """Random feasible problems: pick an interior point per problem, draw
+    constraint normals uniformly on the circle and offset them so the
+    interior point is strictly feasible (paper: "constraint lines are
+    generated randomly and tested to ensure a solution is possible")."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    xstar = jax.random.uniform(k1, (batch, 1, 2), dtype, -radius / 2, radius / 2)
+    theta = jax.random.uniform(k2, (batch, m), dtype, 0.0, 2.0 * np.pi)
+    A = jnp.stack([jnp.cos(theta), jnp.sin(theta)], axis=-1)  # (B, m, 2)
+    s = jax.random.uniform(k3, (batch, m), dtype, 0.1, slack)
+    b = jnp.einsum("bmd,bmd->bm", A, jnp.broadcast_to(xstar, A.shape)) + s
+    phi = jax.random.uniform(k4, (batch,), dtype, 0.0, 2.0 * np.pi)
+    c = jnp.stack([jnp.cos(phi), jnp.sin(phi)], axis=-1)
+    return make_batch(A, b, c)
+
+
+def replicated_lp(key: jax.Array, batch: int, m: int, **kw) -> LPBatch:
+    """Paper's batch construction: one LP generated per run and copied
+    ``batch`` times into memory to simulate batch numbers."""
+    one = random_feasible_lp(key, 1, m, **kw)
+    rep = lambda a: jnp.broadcast_to(a, (batch,) + a.shape[1:])
+    return LPBatch(A=rep(one.A), b=rep(one.b), c=rep(one.c),
+                   m_valid=rep(one.m_valid))
+
+
+def adversarial_lp(batch: int, m: int, *, dtype=jnp.float32) -> LPBatch:
+    """Worst-case consideration order (paper section 2.1): constraints are
+    tangents to the unit circle with angles sweeping monotonically toward
+    the objective direction, so *every* constraint, considered in the given
+    order, invalidates the previous intermediate optimum.  Used to benchmark
+    the naive/RGB divergence gap and the value of randomisation."""
+    i = np.arange(m, dtype=np.float64)
+    # Angles converge geometrically toward pi/2 (the optimum for c=(0,1)).
+    ang = np.pi / 2 + (np.pi / 2.2) * (0.98 ** i) * np.where(i % 2 == 0, 1.0, -1.0)
+    A = np.stack([np.cos(ang), np.sin(ang)], axis=-1)
+    b = np.ones((m,))
+    A = jnp.asarray(np.broadcast_to(A, (batch, m, 2)), dtype)
+    b = jnp.asarray(np.broadcast_to(b, (batch, m)), dtype)
+    c = jnp.broadcast_to(jnp.asarray([0.0, 1.0], dtype), (batch, 2))
+    return make_batch(A, b, c)
+
+
+def ragged_feasible_lp(
+    key: jax.Array, batch: int, m_max: int, *, m_min: int = 4, dtype=jnp.float32
+) -> LPBatch:
+    """Different-sized LPs in one batch (paper section 6 'allowance for
+    different-sized individual LPs within the batches')."""
+    kf, km = jax.random.split(key)
+    full = random_feasible_lp(kf, batch, m_max, dtype=dtype)
+    m_valid = jax.random.randint(km, (batch,), m_min, m_max + 1)
+    idx = jnp.arange(m_max)[None, :]
+    keep = idx < m_valid[:, None]
+    A = jnp.where(keep[..., None], full.A, jnp.asarray(PAD_A, dtype))
+    b = jnp.where(keep, full.b, jnp.asarray(PAD_B, dtype))
+    return LPBatch(A=A, b=b, c=full.c, m_valid=m_valid.astype(jnp.int32))
+
+
+def infeasible_lp(batch: int, m: int, *, dtype=jnp.float32) -> LPBatch:
+    """x <= -1 and -x <= -1 (i.e. x >= 1): empty feasible set; remaining
+    rows neutral."""
+    A = np.zeros((m, 2))
+    b = np.full((m,), PAD_B)
+    A[0] = (1.0, 0.0); b[0] = -1.0
+    A[1] = (-1.0, 0.0); b[1] = -1.0
+    A = jnp.asarray(np.broadcast_to(A, (batch, m, 2)), dtype)
+    b = jnp.asarray(np.broadcast_to(b, (batch, m)), dtype)
+    c = jnp.broadcast_to(jnp.asarray([1.0, 0.0], dtype), (batch, 2))
+    return make_batch(A, b, c)

@@ -1,0 +1,117 @@
+"""The 1-D linear program at the heart of Seidel's algorithm (paper eqs. 3-4).
+
+When the incremental optimum violates constraint ``l = (a_i, b_i)`` the new
+optimum lies on the line ``a_i @ x = b_i``.  Parameterise the line as
+``x(t) = p0 + t * u`` with ``p0`` the closest point to the origin and ``u``
+the unit direction along the line.  Every previously-considered constraint
+``h`` intersects the line at sigma(h, l) = (b_h - a_h @ p0) / (a_h @ u) and
+bounds t from the left (a_h @ u < 0) or the right (a_h @ u > 0):
+
+    u_left  = max over left-bounding  sigma(h, l)     (paper eq. 3)
+    u_right = min over right-bounding sigma(h, l)     (paper eq. 4)
+
+infeasible iff u_left > u_right, otherwise t* is whichever end the objective
+prefers.  These max/min folds are exactly the accumulations the paper
+implements with shared-memory atomicMin/atomicMax; on TPU they are lane
+reductions (``jnp.min``/``jnp.max``), which are contention-free.
+
+Everything here is written over an arbitrary leading "work-unit" axis so the
+same function serves the scalar reference, the hand-vectorised RGB solver and
+the Pallas kernel body.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# All epsilons are absolute distances because constraints are normalised to
+# unit normals before solving (see lp.normalize_batch).
+EPS_DENOM = 1e-7   # |a_h @ u| below this -> constraint parallel to the line
+EPS_FEAS = 1e-5    # feasibility slack (paper uses a 5-significant-figure
+                   # tolerance when comparing CPU and GPU accumulations)
+EPS_TIE = 1e-9     # |c @ u| below this -> objective tie, use perpendicular
+
+
+def line_frame(a: jax.Array, b: jax.Array):
+    """Return (p0, u): point on the line a@x=b closest to the origin, and a
+    unit vector along the line.  ``a`` must be unit-norm."""
+    p0 = a * b[..., None]
+    u = jnp.stack([-a[..., 1], a[..., 0]], axis=-1)
+    return p0, u
+
+
+def sigma_bounds(A_prev, b_prev, p0, u, mask):
+    """Intersections of previous constraints with the line (the work units).
+
+    A_prev: (..., H, 2), b_prev: (..., H), p0/u: (..., 2), mask: (..., H)
+    Returns (t_lo, t_hi, parallel_infeasible) reduced over H.
+    """
+    denom = jnp.einsum("...hd,...d->...h", A_prev, u)
+    num = b_prev - jnp.einsum("...hd,...d->...h", A_prev, p0)
+    is_par = jnp.abs(denom) <= EPS_DENOM
+    t = num / jnp.where(is_par, 1.0, denom)  # guarded divide
+    big = jnp.asarray(jnp.finfo(t.dtype).max, t.dtype)
+    hi = jnp.where(mask & (denom > EPS_DENOM), t, big)       # t <= sigma
+    lo = jnp.where(mask & (denom < -EPS_DENOM), t, -big)     # t >= sigma
+    t_hi = jnp.min(hi, axis=-1)   # paper eq. 4 (atomicMin on the GPU)
+    t_lo = jnp.max(lo, axis=-1)   # paper eq. 3 (atomicMax on the GPU)
+    par_bad = jnp.any(mask & is_par & (num < -EPS_FEAS), axis=-1)
+    return t_lo, t_hi, par_bad
+
+
+def choose_t(t_lo, t_hi, c, cperp, u):
+    """Pick the end of the feasible interval the (augmented) objective
+    prefers.  Ties on c@u are broken with the perpendicular objective so the
+    incremental optimum stays unique (required by Seidel's algorithm)."""
+    cu = jnp.einsum("...d,...d->...", c, u)
+    cpu = jnp.einsum("...d,...d->...", cperp, u)
+    pick_hi = jnp.where(
+        jnp.abs(cu) > EPS_TIE, cu > 0.0, cpu > 0.0
+    )
+    return jnp.where(pick_hi, t_hi, t_lo)
+
+
+def resolve_on_line(a_i, b_i, A_prev, b_prev, c, cperp, mask):
+    """Full 1-D re-solve: new optimum on the line of the violated constraint.
+
+    Shapes (leading axes broadcast): a_i (..., 2), b_i (...,),
+    A_prev (..., H, 2), b_prev (..., H), mask (..., H).
+    Returns (x_new (..., 2), feasible (...,)).
+    """
+    p0, u = line_frame(a_i, b_i)
+    t_lo, t_hi, par_bad = sigma_bounds(A_prev, b_prev, p0, u, mask)
+    feasible = (t_lo <= t_hi + EPS_FEAS) & ~par_bad
+    t = choose_t(t_lo, t_hi, c, cperp, u)
+    x_new = p0 + t[..., None] * u
+    return x_new, feasible
+
+
+def perp(c):
+    return jnp.stack([-c[..., 1], c[..., 0]], axis=-1)
+
+
+def box_corner(c, M, dtype=None):
+    """Initial optimum: the corner of the bounding box |x|,|y| <= M that the
+    augmented objective (c, tie-broken by perp(c)) prefers."""
+    cp = perp(c)
+
+    def pick(v, tb):
+        s = jnp.where(jnp.abs(v) > EPS_TIE, jnp.sign(v),
+                      jnp.where(jnp.abs(tb) > EPS_TIE, jnp.sign(tb), 1.0))
+        return s
+
+    sx = pick(c[..., 0], cp[..., 0])
+    sy = pick(c[..., 1], cp[..., 1])
+    x0 = jnp.stack([sx * M, sy * M], axis=-1)
+    if dtype is not None:
+        x0 = x0.astype(dtype)
+    return x0
+
+
+def box_constraints(M, dtype=jnp.float32):
+    """The four bounds x<=M, -x<=M, y<=M, -y<=M that make every intermediate
+    optimum finite and unique (paper section 2.1)."""
+    A = jnp.asarray(
+        [[1.0, 0.0], [-1.0, 0.0], [0.0, 1.0], [0.0, -1.0]], dtype)
+    b = jnp.full((4,), M, dtype)
+    return A, b

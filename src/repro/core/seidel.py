@@ -1,0 +1,234 @@
+"""Batched Seidel incremental 2-D LP solvers (the paper's NaiveRGB and RGB).
+
+Two pure-JAX implementations with deliberately different execution shapes:
+
+``solve_naive`` — NaiveRGB analogue (paper Fig. 1).  One LP per vmap lane.
+    Under ``vmap`` the per-LP ``lax.cond`` "do I need a re-solve?" becomes a
+    ``select``: *every* lane executes the O(i) re-solve at *every* step,
+    exactly like a diverged warp in which one violated thread stalls the
+    other 31.  This is the faithful divergence baseline.
+
+``solve_rgb`` — RGB analogue (paper Fig. 2).  The batch is processed in
+    tiles (lax.scan over tiles -> real sequential control flow, not vmap).
+    Within a tile the step-i membership test is a dense vector op over
+    problems, and the O(i) re-solve work units (one per prior constraint)
+    are laid along the minor axis and executed as dense vector ops with a
+    min/max reduction in place of the paper's shared-memory atomics.  A
+    scalar-predicate ``lax.cond`` skips the re-solve entirely whenever *no*
+    problem in the tile is violated at step i — the TPU analogue of the
+    cooperative-thread-array early exit, and the reason randomised order
+    pays off (violations become rare as i grows).
+
+The Pallas TPU kernel (kernels/batch_lp.py) implements the same algorithm as
+``solve_rgb`` with explicit VMEM tiling; this module is its oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import oneD
+from repro.core.lp import LPBatch, LPSolution, normalize_batch, shuffle_batch
+
+DEFAULT_M = 1.0e4  # box bound; "very large so as not to affect the optimum"
+
+
+# ---------------------------------------------------------------------------
+# NaiveRGB: vmap of the scalar incremental algorithm
+# ---------------------------------------------------------------------------
+
+def _solve_one(A, b, c, m_valid, *, M):
+    """Scalar Seidel solve for one LP.  A (m,2), b (m,), c (2,)."""
+    m = A.shape[0]
+    dt = A.dtype
+    boxA, boxb = oneD.box_constraints(M, dt)
+    Aall = jnp.concatenate([boxA, A], axis=0)  # (m+4, 2)
+    ball = jnp.concatenate([boxb, b], axis=0)
+    cperp = oneD.perp(c)
+    x0 = oneD.box_corner(c, jnp.asarray(M, dt))
+    h_idx = jnp.arange(m + 4)
+
+    def body(i, carry):
+        x, feas = carry
+        a_i, b_i = A[i], b[i]
+        violated = feas & (i < m_valid) & (
+            jnp.dot(a_i, x) > b_i + oneD.EPS_FEAS)
+        # Under vmap this re-solve is executed by every lane every step
+        # (cond -> select): the divergence cost the paper's Fig. 1 shows.
+        mask = h_idx < (i + 4)
+        x_new, feas_new = oneD.resolve_on_line(
+            a_i, b_i, Aall, ball, c, cperp, mask)
+        x = jnp.where(violated, x_new, x)
+        feas = jnp.where(violated, feas & feas_new, feas)
+        return x, feas
+
+    x, feas = jax.lax.fori_loop(0, m, body, (x0, jnp.asarray(True)))
+    return x, feas
+
+
+def solve_naive(batch: LPBatch, *, M: float = DEFAULT_M) -> LPSolution:
+    x, feas = jax.vmap(
+        functools.partial(_solve_one, M=M)
+    )(batch.A, batch.b, batch.c, batch.m_valid)
+    return LPSolution(x=x, feasible=feas,
+                      objective=jnp.einsum("bd,bd->b", batch.c, x))
+
+
+# ---------------------------------------------------------------------------
+# RGB: tile-cooperative work-unit execution
+# ---------------------------------------------------------------------------
+
+def _solve_tile(A, b, c, m_valid, *, M, chunk: int = 0):
+    """Solve a tile of T problems cooperatively.
+
+    A (T, m, 2), b (T, m), c (T, 2), m_valid (T,).
+
+    chunk > 0 enables the *chunked re-solve* (beyond-paper optimisation,
+    EXPERIMENTS.md section Perf-LP): the 1-D LP at step i only touches the
+    first ceil((i+4)/chunk) lane-chunks of prior constraints, so re-solve
+    work is O(i) like the serial algorithm, instead of O(m) dense.  The
+    paper's WU count is i per re-solve; the dense variant pays m.
+    """
+    T, m = A.shape[0], A.shape[1]
+    dt = A.dtype
+    boxA, boxb = oneD.box_constraints(M, dt)
+    Aall = jnp.concatenate([jnp.broadcast_to(boxA, (T, 4, 2)), A], axis=1)
+    ball = jnp.concatenate([jnp.broadcast_to(boxb, (T, 4)), b], axis=1)
+    if chunk:
+        pad = (-Aall.shape[1]) % chunk
+        Aall = jnp.pad(Aall, ((0, 0), (0, pad), (0, 0)))
+        ball = jnp.pad(ball, ((0, 0), (0, pad)), constant_values=1.0)
+    H = Aall.shape[1]
+    cperp = oneD.perp(c)
+    x0 = oneD.box_corner(c, jnp.asarray(M, dt))
+    h_idx = jnp.arange(H)[None, :]  # (1, H)
+
+    def step(i, carry):
+        x, feas = carry
+        a_i = jax.lax.dynamic_index_in_dim(A, i, axis=1, keepdims=False)
+        b_i = jax.lax.dynamic_index_in_dim(b, i, axis=1, keepdims=False)
+        violated = feas & (i < m_valid) & (
+            jnp.einsum("td,td->t", a_i, x) > b_i + oneD.EPS_FEAS)
+
+        def resolve(xf):
+            x, feas = xf
+            # Work units: all (problem, prior-constraint) intersections,
+            # laid dense along the minor axis; masked min/max reduction
+            # replaces shared-memory atomics.
+            if not chunk:
+                mask = h_idx < (i + 4)
+                x_new, feas_new = oneD.resolve_on_line(
+                    a_i, b_i, Aall, ball, c, cperp, mask)
+            else:
+                x_new, feas_new = _resolve_chunked(
+                    a_i, b_i, Aall, ball, c, cperp, i + 4, chunk)
+            x = jnp.where(violated[:, None], x_new, x)
+            feas = jnp.where(violated, feas & feas_new, feas)
+            return x, feas
+
+        # Scalar predicate -> genuine skip (block-level early exit).
+        return jax.lax.cond(jnp.any(violated), resolve, lambda xf: xf,
+                            (x, feas))
+
+    x, feas = jax.lax.fori_loop(0, m, step, (x0, jnp.ones((T,), bool)))
+    return x, feas
+
+
+def _resolve_chunked(a_i, b_i, Aall, ball, c, cperp, n_prior, chunk):
+    """1-D re-solve touching only ceil(n_prior/chunk) lane-chunks."""
+    T, H, _ = Aall.shape
+    dt = Aall.dtype
+    p0, u = oneD.line_frame(a_i, b_i)
+    big = jnp.asarray(jnp.finfo(dt).max, dt)
+    n_chunks = (n_prior + chunk - 1) // chunk
+
+    def body(j, carry):
+        t_lo, t_hi, bad = carry
+        As = jax.lax.dynamic_slice_in_dim(Aall, j * chunk, chunk, axis=1)
+        bs = jax.lax.dynamic_slice_in_dim(ball, j * chunk, chunk, axis=1)
+        hloc = j * chunk + jnp.arange(chunk)[None, :]
+        mask = hloc < n_prior
+        lo_j, hi_j, bad_j = oneD.sigma_bounds(As, bs, p0, u, mask)
+        return (jnp.maximum(t_lo, lo_j), jnp.minimum(t_hi, hi_j),
+                bad | bad_j)
+
+    t_lo0 = jnp.full((T,), -big)
+    t_hi0 = jnp.full((T,), big)
+    bad0 = jnp.zeros((T,), bool)
+    t_lo, t_hi, bad = jax.lax.fori_loop(0, n_chunks, body,
+                                        (t_lo0, t_hi0, bad0))
+    feasible = (t_lo <= t_hi + oneD.EPS_FEAS) & ~bad
+    t = oneD.choose_t(t_lo, t_hi, c, cperp, u)
+    return p0 + t[..., None] * u, feasible
+
+
+def solve_rgb(batch: LPBatch, *, M: float = DEFAULT_M,
+              tile: int = 32, chunk: int = 0) -> LPSolution:
+    B, m = batch.batch, batch.m
+    T = min(tile, B) if B > 0 else tile
+    n_tiles = -(-B // T)
+    pad = n_tiles * T - B
+
+    def padded(a, fill):
+        if pad == 0:
+            return a
+        width = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, width, constant_values=fill)
+
+    A = padded(batch.A, 0.0).reshape(n_tiles, T, m, 2)
+    b = padded(batch.b, 1.0).reshape(n_tiles, T, m)
+    c = padded(batch.c, 1.0).reshape(n_tiles, T, 2)
+    mv = padded(batch.m_valid, 0).reshape(n_tiles, T)
+
+    def scan_body(_, xs):
+        Ai, bi, ci, mvi = xs
+        x, feas = _solve_tile(Ai, bi, ci, mvi, M=M, chunk=chunk)
+        return None, (x, feas)
+
+    _, (x, feas) = jax.lax.scan(scan_body, None, (A, b, c, mv))
+    x = x.reshape(n_tiles * T, 2)[:B]
+    feas = feas.reshape(n_tiles * T)[:B]
+    return LPSolution(x=x, feasible=feas,
+                      objective=jnp.einsum("bd,bd->b", batch.c, x))
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+def solve_batch_lp(
+    batch: LPBatch,
+    *,
+    method: str = "rgb",
+    key: Optional[jax.Array] = None,
+    M: float = DEFAULT_M,
+    tile: int = 32,
+    chunk: int = 0,
+    normalize: bool = True,
+    interpret: Optional[bool] = None,
+) -> LPSolution:
+    """Solve a batch of 2-D LPs.
+
+    method: "naive" (divergent baseline), "rgb" (pure-JAX cooperative
+    solver) or "kernel" (Pallas TPU kernel; ``interpret=True`` runs the
+    kernel body on CPU).  ``key`` enables Seidel's randomised constraint
+    order — strongly recommended (expected O(m) instead of worst-case
+    O(m^2) re-solve work).
+    """
+    if normalize:
+        batch = normalize_batch(batch)
+    if key is not None:
+        batch = shuffle_batch(key, batch)
+    if method == "naive":
+        return solve_naive(batch, M=M)
+    if method == "rgb":
+        return solve_rgb(batch, M=M, tile=tile, chunk=chunk)
+    if method == "kernel":
+        from repro.kernels import ops  # lazy: keeps core import-light
+        return ops.solve_batch_lp_kernel(
+            batch, M=M, interpret=bool(interpret) if interpret is not None
+            else jax.default_backend() == "cpu")
+    raise ValueError(f"unknown method {method!r}")

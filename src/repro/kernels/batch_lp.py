@@ -1,0 +1,219 @@
+"""Pallas TPU kernel for the RGB batch 2-D LP solver.
+
+TPU-native realisation of the paper's cooperative-thread-array design
+(DESIGN.md section 2):
+
+* One **grid step** owns a tile of ``T`` problems (the thread-block
+  analogue).  Constraints are stored struct-of-arrays, packed
+  ``L[b, 0:3, h] = (a_x, a_y, b)`` with the constraint index ``h`` on the
+  **128-lane minor axis** — the paper's "combining the information into one
+  extended set of data ensures scattered reads use as much of each cache
+  line as possible", except here every load is a full (8, 128) VMEM tile.
+* The O(i) re-solve **work units** (one 1-D intersection per prior
+  constraint) execute as dense vector ops along the lane axis; the paper's
+  shared-memory ``atomicMin``/``atomicMax`` accumulation of u_left/u_right
+  becomes a masked lane **min/max reduction** (TPUs have no atomics; a
+  reduction tree is the idiomatic equivalent and is contention-free).
+* A scalar-predicate ``lax.cond`` skips the whole re-solve when no problem
+  in the tile is violated at step i — the block-level early exit that makes
+  randomised constraint order pay (expected O(1) violations per problem).
+* The iteration count is ``max(m_valid)`` over the tile (dynamic
+  ``while_loop``), so a tile of small LPs finishes early even when another
+  tile carries large LPs — the paper's "offloading work units of larger
+  problems onto threads which are computing smaller problems" becomes
+  "tiles only pay for their own largest problem".
+
+All per-problem scalars are kept as (T, 1) so every intermediate is >= 2-D
+(Mosaic requires >= 2-D iota / layouts).  The kernel is validated in
+``interpret=True`` mode on CPU against ``kernels.ref`` and scipy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import oneD
+
+DEFAULT_TILE = 128
+LANE = 128
+
+
+def _pick_tile(m_pad: int, vmem_budget_bytes: int = 8 * 1024 * 1024) -> int:
+    """Choose the batch tile so the packed constraint block fits the VMEM
+    budget: T * 4 rows * m_pad lanes * 4 B.  Keep T a multiple of 8
+    (sublanes)."""
+    t = vmem_budget_bytes // (4 * m_pad * 4)
+    t = max(8, min(DEFAULT_TILE, (t // 8) * 8))
+    return t
+
+
+def _rgb_kernel(L_ref, c_ref, mv_ref, x_ref, feas_ref, *, M: float,
+                chunk: int = 0):
+    L = L_ref[...]            # (T, 4, m_pad) packed (a_x, a_y, b, 0)
+    c = c_ref[...]            # (T, 2)
+    mv = mv_ref[...]          # (T, 1) int32
+    T, _, m_pad = L.shape
+    dt = L.dtype
+
+    ax = L[:, 0, :]           # (T, m_pad)
+    ay = L[:, 1, :]
+    bb = L[:, 2, :]
+
+    cx = c[:, 0:1]            # (T, 1)
+    cy = c[:, 1:2]
+    cpx, cpy = -cy, cx        # perpendicular (tie-break) objective
+
+    big = jnp.asarray(jnp.finfo(dt).max, dt)
+    Mv = jnp.asarray(M, dt)
+    h_iota = jax.lax.broadcasted_iota(jnp.int32, (T, m_pad), 1)
+
+    def _sign_tb(v, tb):
+        return jnp.where(jnp.abs(v) > oneD.EPS_TIE, jnp.sign(v),
+                         jnp.where(jnp.abs(tb) > oneD.EPS_TIE,
+                                   jnp.sign(tb), 1.0))
+
+    x0 = jnp.concatenate(
+        [_sign_tb(cx, cpx) * Mv, _sign_tb(cy, cpy) * Mv], axis=1)  # (T, 2)
+    feas0 = jnp.ones((T, 1), jnp.bool_)
+    max_mv = jnp.max(mv)
+
+    def cond(carry):
+        i, _, _ = carry
+        return i < max_mv
+
+    def body(carry):
+        i, x, feas = carry
+        a_ix = jax.lax.dynamic_slice_in_dim(ax, i, 1, axis=1)  # (T, 1)
+        a_iy = jax.lax.dynamic_slice_in_dim(ay, i, 1, axis=1)
+        b_i = jax.lax.dynamic_slice_in_dim(bb, i, 1, axis=1)
+        lhs = a_ix * x[:, 0:1] + a_iy * x[:, 1:2]
+        violated = feas & (i < mv) & (lhs > b_i + oneD.EPS_FEAS)  # (T, 1)
+
+        def resolve(xf):
+            x, feas = xf
+            # Line frame: p0 = a_i * b_i (unit normals), u = perp(a_i).
+            p0x, p0y = a_ix * b_i, a_iy * b_i
+            ux, uy = -a_iy, a_ix
+
+            def _bounds_block(axc, ayc, bbc, iota_c):
+                """sigma bounds over one lane block (paper eqs. 3-4);
+                the min/max is the atomicMin/atomicMax analogue."""
+                denom = axc * ux + ayc * uy
+                num = bbc - (axc * p0x + ayc * p0y)
+                is_par = jnp.abs(denom) <= oneD.EPS_DENOM
+                t = num / jnp.where(is_par, jnp.ones((), dt), denom)
+                mask = iota_c < i
+                hi = jnp.where(mask & (denom > oneD.EPS_DENOM), t, big)
+                lo = jnp.where(mask & (denom < -oneD.EPS_DENOM), t, -big)
+                bad = jnp.any(mask & is_par & (num < -oneD.EPS_FEAS),
+                              axis=1, keepdims=True)
+                return (jnp.max(lo, axis=1, keepdims=True),
+                        jnp.min(hi, axis=1, keepdims=True), bad)
+
+            if chunk:
+                # chunked re-solve: only ceil(i/chunk) lane blocks of WUs
+                # (work proportional to i, the true WU count)
+                n_blocks = (i + chunk - 1) // chunk
+
+                def blk(j, carry):
+                    t_lo, t_hi, bad = carry
+                    axc = jax.lax.dynamic_slice_in_dim(ax, j * chunk,
+                                                       chunk, axis=1)
+                    ayc = jax.lax.dynamic_slice_in_dim(ay, j * chunk,
+                                                       chunk, axis=1)
+                    bbc = jax.lax.dynamic_slice_in_dim(bb, j * chunk,
+                                                       chunk, axis=1)
+                    iota_c = j * chunk + jax.lax.broadcasted_iota(
+                        jnp.int32, (T, chunk), 1)
+                    lo_j, hi_j, bad_j = _bounds_block(axc, ayc, bbc, iota_c)
+                    return (jnp.maximum(t_lo, lo_j),
+                            jnp.minimum(t_hi, hi_j), bad | bad_j)
+
+                t_lo, t_hi, par_bad = jax.lax.fori_loop(
+                    0, n_blocks, blk,
+                    (jnp.full((T, 1), -big, dt), jnp.full((T, 1), big, dt),
+                     jnp.zeros((T, 1), jnp.bool_)))
+            else:
+                t_lo, t_hi, par_bad = _bounds_block(ax, ay, bb, h_iota)
+            # --- The four box bounds, computed in closed form ---
+            for bd, bn in (
+                (ux, Mv - p0x), (-ux, Mv + p0x),
+                (uy, Mv - p0y), (-uy, Mv + p0y),
+            ):
+                t_hi = jnp.minimum(
+                    t_hi, jnp.where(bd > oneD.EPS_DENOM, bn / bd, big))
+                t_lo = jnp.maximum(
+                    t_lo, jnp.where(bd < -oneD.EPS_DENOM, bn / bd, -big))
+                par_bad = par_bad | (
+                    (jnp.abs(bd) <= oneD.EPS_DENOM) & (bn < -oneD.EPS_FEAS))
+            feas_new = (t_lo <= t_hi + oneD.EPS_FEAS) & ~par_bad
+            # Objective endpoint selection (tie -> perpendicular objective).
+            cu = cx * ux + cy * uy
+            cpu = cpx * ux + cpy * uy
+            pick_hi = jnp.where(jnp.abs(cu) > oneD.EPS_TIE, cu > 0.0,
+                                cpu > 0.0)
+            tt = jnp.where(pick_hi, t_hi, t_lo)
+            x_new = jnp.concatenate([p0x + tt * ux, p0y + tt * uy], axis=1)
+            x = jnp.where(violated, x_new, x)
+            feas = jnp.where(violated, feas & feas_new, feas)
+            return x, feas
+
+        x, feas = jax.lax.cond(jnp.any(violated), resolve, lambda xf: xf,
+                               (x, feas))
+        return i + 1, x, feas
+
+    _, x, feas = jax.lax.while_loop(cond, body, (jnp.int32(0), x0, feas0))
+    x_ref[...] = x
+    feas_ref[...] = feas.astype(jnp.int32)
+
+
+def rgb_pallas(
+    L: jax.Array,        # (B, 4, m_pad) packed constraints, unit normals
+    c: jax.Array,        # (B, 2)
+    m_valid: jax.Array,  # (B, 1) int32
+    *,
+    M: float,
+    tile: int | None = None,
+    chunk: int = 0,      # 0 = dense re-solve; 128 = lane-width chunks
+    interpret: bool = False,
+):
+    """Launch the RGB kernel.  B must be a multiple of the tile and m_pad a
+    multiple of 128 (handled by kernels.ops)."""
+    B, _, m_pad = L.shape
+    T = tile or _pick_tile(m_pad)
+    if B % T:
+        raise ValueError(f"batch {B} not a multiple of tile {T}")
+    if m_pad % LANE:
+        raise ValueError(f"m_pad {m_pad} not a multiple of {LANE}")
+    grid = (B // T,)
+    flops_resolve = 12 * m_pad  # per problem per violation, approx
+    if chunk and m_pad % chunk:
+        raise ValueError(f"m_pad {m_pad} % chunk {chunk} != 0")
+    kernel = functools.partial(_rgb_kernel, M=M, chunk=chunk)
+    x, feas = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, 4, m_pad), lambda t: (t, 0, 0)),
+            pl.BlockSpec((T, 2), lambda t: (t, 0)),
+            pl.BlockSpec((T, 1), lambda t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, 2), lambda t: (t, 0)),
+            pl.BlockSpec((T, 1), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 2), L.dtype),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        cost_estimate=pl.CostEstimate(
+            flops=B * flops_resolve * 2,  # ~2 ln m expected violations
+            bytes_accessed=L.size * L.dtype.itemsize,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(L, c, m_valid)
+    return x, feas

@@ -1,0 +1,84 @@
+"""Jit'd public wrappers around the Pallas RGB kernel.
+
+Handles layout conversion (LPBatch -> packed struct-of-arrays with the
+constraint index on the lane axis), padding (batch to a tile multiple with
+neutral problems, constraints to a 128-lane multiple with neutral rows) and
+unpacking of results.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lp import LPBatch, LPSolution, PAD_B, normalize_batch
+from repro.kernels.batch_lp import LANE, _pick_tile, rgb_pallas
+
+
+def pack_constraints(batch: LPBatch):
+    """LPBatch -> (L (B,4,m_pad), c (B,2), m_valid (B,1)) with unit-norm
+    rows assumed (call lp.normalize_batch first)."""
+    B, m = batch.batch, batch.m
+    m_pad = -(-m // LANE) * LANE
+    dt = batch.A.dtype
+    ax = batch.A[..., 0]
+    ay = batch.A[..., 1]
+    bb = batch.b
+    if m_pad != m:
+        pad = ((0, 0), (0, m_pad - m))
+        ax = jnp.pad(ax, pad)
+        ay = jnp.pad(ay, pad)
+        bb = jnp.pad(bb, pad, constant_values=PAD_B)
+    zeros = jnp.zeros_like(ax)
+    L = jnp.stack([ax, ay, bb, zeros], axis=1)  # (B, 4, m_pad)
+    return L, batch.c.astype(dt), batch.m_valid.reshape(B, 1)
+
+
+def _pad_batch_dim(L, c, mv, T):
+    B = L.shape[0]
+    Bp = -(-B // T) * T
+    if Bp == B:
+        return L, c, mv, B
+    pad = Bp - B
+    L = jnp.pad(L, ((0, pad), (0, 0), (0, 0)))
+    # Neutral problems: c=(1,0), m_valid=0 -> solved at the box corner in
+    # zero iterations; they never trigger a re-solve.
+    c = jnp.concatenate(
+        [c, jnp.broadcast_to(jnp.asarray([1.0, 0.0], c.dtype), (pad, 2))])
+    mv = jnp.concatenate([mv, jnp.zeros((pad, 1), mv.dtype)])
+    return L, c, mv, B
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("M", "tile", "chunk", "interpret"))
+def _solve_packed(L, c, mv, *, M, tile, chunk, interpret):
+    L, c, mv, B = _pad_batch_dim(L, c, mv, tile)
+    x, feas = rgb_pallas(L, c, mv, M=M, tile=tile, chunk=chunk,
+                         interpret=interpret)
+    return x[:B], feas[:B, 0]
+
+
+def solve_batch_lp_kernel(
+    batch: LPBatch,
+    *,
+    M: float = 1.0e4,
+    tile: int | None = None,
+    chunk: int = 0,
+    interpret: bool = False,
+    normalize: bool = False,
+) -> LPSolution:
+    """Solve an LPBatch with the Pallas kernel.  ``interpret=True`` executes
+    the kernel body in Python on CPU (how this container validates it);
+    on a TPU backend leave it False."""
+    if normalize:
+        batch = normalize_batch(batch)
+    L, c, mv = pack_constraints(batch)
+    T = tile or _pick_tile(L.shape[-1])
+    x, feas = _solve_packed(L, c, mv, M=M, tile=T, chunk=chunk,
+                            interpret=interpret)
+    return LPSolution(
+        x=x,
+        feasible=feas.astype(bool),
+        objective=jnp.einsum("bd,bd->b", batch.c.astype(x.dtype), x),
+    )

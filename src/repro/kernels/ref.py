@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the Pallas RGB kernel.
+
+Mirrors the kernel's exact interface (packed struct-of-arrays layout) but
+computes with plain jnp on the unpacked representation, reusing the core
+solver.  Every kernel test asserts allclose against this module.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lp import LPBatch, normalize_batch
+from repro.core.seidel import solve_rgb
+
+
+def unpack_constraints(L, c, m_valid) -> LPBatch:
+    A = jnp.stack([L[:, 0, :], L[:, 1, :]], axis=-1)  # (B, m_pad, 2)
+    b = L[:, 2, :]
+    return LPBatch(A=A, b=b, c=c, m_valid=m_valid.reshape(-1).astype(jnp.int32))
+
+
+def solve_packed_ref(L, c, m_valid, *, M: float = 1.0e4):
+    """Reference results for packed inputs: (x (B,2), feasible (B,) int32)."""
+    sol = solve_rgb(unpack_constraints(L, c, m_valid), M=M)
+    return sol.x, sol.feasible.astype(jnp.int32)

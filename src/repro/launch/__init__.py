@@ -1,0 +1,1 @@
+"""Mesh construction, step builders, dry-run and training drivers."""

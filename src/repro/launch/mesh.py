@@ -1,0 +1,52 @@
+"""Production and test meshes.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (required so tests see one CPU device while
+dryrun.py sees its 512 forced host devices)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.models.common import MeshInfo
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods =
+    512 chips with a leading "pod" axis (outer data / hierarchical
+    all-reduce axis)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever local devices exist (tests, smoke runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_info(mesh) -> MeshInfo:
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    data_axes = tuple(n for n in names if n != "model")
+    data_size = 1
+    for n in data_axes:
+        data_size *= sizes[n]
+    return MeshInfo(model_axis="model", data_axes=data_axes,
+                    model_size=sizes.get("model", 1), data_size=data_size,
+                    bound=True)
+
+
+def batch_axes(mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    """The data axes a global batch can shard over (None -> replicate,
+    e.g. batch=1 long-context decode)."""
+    mi = mesh_info(mesh)
+    if batch % mi.data_size == 0:
+        return mi.data_axes
+    # try the innermost data axis alone (e.g. batch 16 on a 2x16 data mesh)
+    last = mi.data_axes[-1]
+    size = dict(zip(mesh.axis_names, mesh.devices.shape))[last]
+    if batch % size == 0:
+        return (last,)
+    return None

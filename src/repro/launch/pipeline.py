@@ -1,0 +1,80 @@
+"""GPipe-style pipeline parallelism over a ``pipe`` mesh axis.
+
+For scaling beyond the 2-pod mesh (DESIGN.md section 5): when TP x DP
+saturates ICI, layers are partitioned into S stages (the stacked layer
+axis sharded over ``pipe``) and microbatches stream through with
+boundary activations moved by ``lax.ppermute``.  The schedule is the
+classic GPipe fill-drain: M microbatches finish in M + S - 1 ticks with
+bubble fraction (S-1)/(M+S-1).
+
+The engine is model-agnostic: any per-rank stage function
+``fn(stage_params, x) -> x`` (e.g. a scan over the stage's layer slice)
+can be pipelined.  Reverse-mode AD works through the whole schedule
+(ppermute transposes to the opposite shift), so this composes with
+jax.grad for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gpipe(
+    fn_stage: Callable,
+    stage_params,
+    x_microbatches: jax.Array,  # (M, mb, ...) input microbatches
+    *,
+    n_stages: int,
+    axis: str = "pipe",
+):
+    """Run ``fn_stage`` as a pipeline across ``n_stages`` ranks of
+    ``axis``.  Per-rank code (inside shard_map): ``stage_params`` is the
+    local stage slice; every rank receives the full microbatch array (the
+    first stage consumes it; others ignore).
+
+    Returns the (M, mb, ...) outputs of the LAST stage, replicated across
+    the axis (combined with a masked psum)."""
+    M = x_microbatches.shape[0]
+    stage = lax.axis_index(axis)
+    is_first = stage == 0
+    is_last = stage == n_stages - 1
+    mb_shape = x_microbatches.shape[1:]
+
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def tick(carry, t):
+        buf, acc = carry
+        # stage 0 injects microbatch t (when in range); others take the
+        # neighbour's output from the previous tick
+        mb_idx = jnp.clip(t, 0, M - 1)
+        inject = lax.dynamic_index_in_dim(x_microbatches, mb_idx, axis=0,
+                                          keepdims=False)
+        x = jnp.where(is_first, inject, buf)
+        y = fn_stage(stage_params, x)
+        # collect on the last stage once the pipe has filled
+        out_idx = jnp.clip(t - (n_stages - 1), 0, M - 1)
+        take = is_last & (t >= n_stages - 1)
+        acc = lax.dynamic_update_index_in_dim(
+            acc, jnp.where(take, y, lax.dynamic_index_in_dim(
+                acc, out_idx, axis=0, keepdims=False)), out_idx, axis=0)
+        # shift boundary activations to the next stage
+        buf = lax.ppermute(y, axis, perm)
+        return (buf, acc), None
+
+    buf0 = lax.pvary(jnp.zeros(mb_shape, x_microbatches.dtype), (axis,))
+    acc0 = lax.pvary(jnp.zeros((M,) + mb_shape, x_microbatches.dtype),
+                     (axis,))
+    (_, acc), _ = lax.scan(tick, (buf0, acc0),
+                           jnp.arange(M + n_stages - 1))
+    # only the last stage holds real outputs; make them replicated
+    acc = jnp.where(is_last, acc, 0.0)
+    return lax.psum(acc, axis)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble overhead: idle-tick share of the schedule."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

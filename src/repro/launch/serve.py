@@ -1,0 +1,92 @@
+"""Batched serving driver: continuous prefill + decode over a request
+queue (the inference-side end-to-end example).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+        --requests 16 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch import steps as steps_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    mesh = make_host_mesh(len(jax.devices()), 1)
+    B = args.batch
+    s_max = args.prompt_len + args.gen
+
+    prefill = steps_mod.make_prefill_step(cfg, mesh, global_batch=B).jit()
+    decode = steps_mod.make_decode_step(cfg, mesh, global_batch=B).jit()
+
+    model = steps_mod.make_prefill_step(cfg, mesh, global_batch=B).model
+    params = model.init(jax.random.key(args.seed))
+
+    rng = np.random.default_rng(args.seed)
+    n_batches = -(-args.requests // B)
+    done_tokens = 0
+    t0 = time.time()
+    for b in range(n_batches):
+        prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len),
+                               dtype=np.int32)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (B, cfg.n_prefix, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        logits, cache = prefill(params, batch)
+        # right-pad the prefill cache out to s_max so decode can append
+        cache = _pad_cache(model, cache, B, args.prompt_len, s_max)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        outs = [np.asarray(tok)]
+        pos = jnp.full((B,), args.prompt_len, jnp.int32)
+        for t in range(args.gen - 1):
+            logits, cache = decode(params,
+                                   {"token": tok, "pos": pos + t}, cache)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            outs.append(np.asarray(tok))
+        gen = np.concatenate(outs, axis=1)
+        done_tokens += gen.size
+        print(f"[serve] batch {b}: generated {gen.shape} tokens; "
+              f"sample row: {gen[0][:8]}")
+    dt = time.time() - t0
+    print(f"[serve] {done_tokens} tokens in {dt:.2f}s "
+          f"({done_tokens/dt:.1f} tok/s)")
+
+
+def _pad_cache(model, cache, B, cur_len, s_max):
+    """Grow every seq-length cache axis from cur_len to s_max."""
+    def grow(x):
+        # seq axes are the ones equal to cur_len in KV caches
+        if x.ndim >= 3 and x.shape[2] == cur_len:
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, s_max - cur_len)
+            return jnp.pad(x, pad)
+        return x
+    return jax.tree.map(grow, cache)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,291 @@
+"""Jitted, shard_map'd train / prefill / decode step builders.
+
+The model forwards in models.transformer are per-rank code; these builders
+wrap them in shard_map over the production mesh, attach sharding trees,
+and compose the optimizer (with duplicated-KV grad sync, optional LP
+trust-region clipping, and the optional manual-comm path with int8
+error-feedback gradient compression across pods)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.launch.mesh import batch_axes, mesh_info
+from repro.models.common import ModelConfig
+from repro.models.transformer import build_model
+from repro.optim import (AdamW, apply_updates, compressed_psum,
+                         init_error_state, lp_constrain_updates,
+                         sync_duplicated_grads)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_specs(cfg: ModelConfig, bax, kind: str) -> Dict[str, P]:
+    b = P(bax) if bax else P(None)
+    b2 = P(bax, None) if bax else P(None, None)
+    b3 = P(bax, None, None) if bax else P(None, None, None)
+    if kind == "decode":
+        return {"token": b2, "pos": b}
+    sp = {"tokens": b2}
+    if kind == "train":
+        sp["labels"] = b2
+    if cfg.family == "vlm":
+        sp["patches"] = b3
+    if cfg.family == "encdec":
+        sp["frames"] = b3
+    return sp
+
+
+@dataclasses.dataclass
+class Program:
+    """A compiled-able step: fn + sharding trees + abstract input builders."""
+    mesh: Any
+    cfg: ModelConfig
+    model: Any
+    step: Callable
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jit(self):
+        return jax.jit(self.step, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh,
+    optimizer: Optional[AdamW] = None,
+    *,
+    global_batch: int,
+    lp_clip: bool = False,
+    manual_comm: bool = False,
+    compress_pod: bool = False,
+    check_rep: bool = False,
+) -> Program:
+    mi = mesh_info(mesh)
+    model = build_model(cfg, mi)
+    optimizer = optimizer or AdamW()
+    pspecs = model.full_param_specs()
+    bax = batch_axes(mesh, global_batch)
+    bspecs = _batch_specs(cfg, bax, "train")
+    dup = model.kv_duplication()
+
+    def per_rank_loss(params, batch):
+        loss, metrics = model.loss(params, batch)
+        n = metrics["tokens"].astype(jnp.float32)
+        tot = loss * n
+        for ax in mi.data_axes:
+            tot = lax.psum(tot, ax)
+            n = lax.psum(n, ax)
+        return tot / n, {"ce": tot / n}
+
+    loss_shmap = shard_map(
+        per_rank_loss, mesh=mesh, in_specs=(pspecs, bspecs),
+        out_specs=(P(), {"ce": P()}), check_rep=check_rep)
+
+    if manual_comm and cfg.fsdp:
+        raise ValueError("manual_comm path requires fsdp=False "
+                         "(FSDP grads already reduce-scatter in AD)")
+
+    def step(params, opt_state, batch, extra):
+        if manual_comm:
+            err_in = extra.get("err")
+
+            def per_rank(params, batch, err):
+                def local_loss(p):
+                    loss, metrics = model.loss(p, batch)
+                    n = metrics["tokens"].astype(jnp.float32)
+                    return loss * n, n
+
+                (sl, n), g = jax.value_and_grad(
+                    local_loss, has_aux=True)(params)
+
+                # model-replicated leaves: per-rank grads are partial
+                # (each TP rank only saw its shard's contribution)
+                def _model_sync(x, sp):
+                    names = set()
+                    for e in tuple(sp):
+                        if e is None:
+                            continue
+                        names.update(e if isinstance(e, tuple) else (e,))
+                    if "model" in names or mi.model_size == 1:
+                        return x
+                    return lax.psum(x, "model")
+
+                g = jax.tree.map(_model_sync, g, pspecs)
+                inner = [ax for ax in mi.data_axes if ax != "pod"]
+                for ax in inner:
+                    g = jax.tree.map(lambda x: lax.psum(x, ax), g)
+                    sl, n = lax.psum(sl, ax), lax.psum(n, ax)
+                new_err = err
+                if "pod" in mi.data_axes:
+                    if compress_pod:
+                        g, new_err = compressed_psum(g, err, "pod", 2)
+                        g = jax.tree.map(lambda x: x * 2.0, g)  # sum, not mean
+                    else:
+                        g = jax.tree.map(lambda x: lax.psum(x, "pod"), g)
+                    sl, n = lax.psum(sl, "pod"), lax.psum(n, "pod")
+                g = jax.tree.map(lambda x: x / n, g)
+                return sl / n, g, new_err
+
+            loss, grads, new_err = shard_map(
+                per_rank, mesh=mesh,
+                in_specs=(pspecs, bspecs, pspecs),
+                out_specs=(P(), pspecs, pspecs), check_rep=False)(
+                    params, batch, err_in)
+            extra = {"err": new_err}
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: loss_shmap(p, batch), has_aux=True)(params)
+
+        grads = sync_duplicated_grads(grads, dup, cfg.hd)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        s1 = jnp.ones((), jnp.float32)
+        if lp_clip:
+            updates, s1 = lp_constrain_updates(
+                updates, grads, opt_state.m, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "lp_s1": s1}
+        return params, opt_state, metrics, extra
+
+    psh = _named(mesh, pspecs)
+    from repro.optim.adamw import AdamWState
+    opt_shardings = AdamWState(
+        step=NamedSharding(mesh, P()), m=psh,
+        v=jax.tree.map(lambda x: x, psh))
+    extra_shardings = {"err": psh} if manual_comm else {}
+    bsh = _named(mesh, bspecs)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "lp_s1": NamedSharding(mesh, P())}
+    return Program(
+        mesh=mesh, cfg=cfg, model=model, step=step,
+        in_shardings=(psh, opt_shardings, bsh, extra_shardings),
+        out_shardings=(psh, opt_shardings, metrics_sh, extra_shardings),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve
+# ---------------------------------------------------------------------------
+
+HBM_BYTES = 16e9  # v5e
+
+
+def _serve_cfg(cfg: ModelConfig, mi, weight_resident):
+    """Serving keeps weights resident (no per-token FSDP gather) whenever
+    the TP shard fits HBM — a large collective-term win for decode
+    (EXPERIMENTS.md section Perf).  weight_resident: None=auto."""
+    if not cfg.fsdp:
+        return cfg
+    if weight_resident is None:
+        shard = cfg.param_count() * 2 / max(mi.model_size, 1)
+        weight_resident = shard < 0.75 * HBM_BYTES
+    if weight_resident:
+        import dataclasses as _dc
+        return _dc.replace(cfg, fsdp=False)
+    return cfg
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, *, global_batch: int,
+                      check_rep: bool = False,
+                      weight_resident: bool | None = None) -> Program:
+    mi = mesh_info(mesh)
+    cfg = _serve_cfg(cfg, mi, weight_resident)
+    model = build_model(cfg, mi)
+    pspecs = model.full_param_specs()
+    bax = batch_axes(mesh, global_batch)
+    bspecs = _batch_specs(cfg, bax, "prefill")
+    cspecs = model.cache_specs(bax)
+    logits_spec = P(bax, None) if bax else P(None, None)
+
+    def per_rank(params, batch):
+        return model.prefill(params, batch)
+
+    step = shard_map(per_rank, mesh=mesh, in_specs=(pspecs, bspecs),
+                     out_specs=(logits_spec, cspecs), check_rep=check_rep)
+    return Program(
+        mesh=mesh, cfg=cfg, model=model, step=step,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       _named(mesh, cspecs)),
+    )
+
+
+def make_decode_step(cfg: ModelConfig, mesh, *, global_batch: int,
+                     check_rep: bool = False,
+                     weight_resident: bool | None = None) -> Program:
+    mi = mesh_info(mesh)
+    cfg = _serve_cfg(cfg, mi, weight_resident)
+    model = build_model(cfg, mi)
+    pspecs = model.full_param_specs()
+    bax = batch_axes(mesh, global_batch)
+    bspecs = _batch_specs(cfg, bax, "decode")
+    cspecs = model.cache_specs(bax)
+    logits_spec = P(bax, None) if bax else P(None, None)
+
+    def per_rank(params, batch, cache):
+        return model.decode(params, batch, cache)
+
+    step = shard_map(per_rank, mesh=mesh,
+                     in_specs=(pspecs, bspecs, cspecs),
+                     out_specs=(logits_spec, cspecs), check_rep=check_rep)
+    return Program(
+        mesh=mesh, cfg=cfg, model=model, step=step,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs),
+                      _named(mesh, cspecs)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       _named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's LP solver on the production mesh (batch-parallel)
+# ---------------------------------------------------------------------------
+
+def make_lp_step(mesh, *, batch: int, m: int, method: str = "rgb",
+                 dtype=jnp.float32) -> Program:
+    """Batch 2-D LP solve sharded over every mesh axis (pure data
+    parallelism over problems — the paper's regime at cluster scale)."""
+    from repro.core.lp import LPBatch
+    from repro.core.seidel import solve_rgb, solve_naive
+
+    mi = mesh_info(mesh)
+    all_axes = mi.data_axes + (mi.model_axis,)
+    bspec = {
+        "A": P(all_axes, None, None), "b": P(all_axes, None),
+        "c": P(all_axes, None), "m_valid": P(all_axes),
+    }
+    out_spec = {"x": P(all_axes, None), "feasible": P(all_axes),
+                "objective": P(all_axes)}
+
+    solver = solve_rgb if method == "rgb" else solve_naive
+
+    def per_rank(batch_dict):
+        sol = solver(LPBatch(**batch_dict))
+        return {"x": sol.x, "feasible": sol.feasible,
+                "objective": sol.objective}
+
+    step = shard_map(per_rank, mesh=mesh, in_specs=(bspec,),
+                     out_specs=out_spec, check_rep=False)
+    return Program(mesh=mesh, cfg=None, model=None, step=step,
+                   in_shardings=(_named(mesh, bspec),),
+                   out_shardings=_named(mesh, out_spec))

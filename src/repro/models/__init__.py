@@ -1,0 +1,6 @@
+"""Model zoo: configs, layers and family implementations."""
+from repro.models.common import HeadLayout, MeshInfo, ModelConfig, head_layout
+from repro.models.transformer import build_model
+
+__all__ = ["HeadLayout", "MeshInfo", "ModelConfig", "head_layout",
+           "build_model"]

@@ -1,0 +1,694 @@
+"""Per-rank model layers with explicit collectives.
+
+Every function in this module is written to execute **inside shard_map**:
+inputs are local shards, tensor-parallel reductions are explicit
+``lax.psum`` over the ``model`` axis, and FSDP parameter gathers are
+explicit ``lax.all_gather`` over the data axes.  This keeps the collective
+schedule fully under our control (DESIGN.md section 5) so the roofline's
+collective term is exactly what we wrote, not what a partitioner guessed.
+
+Conventions:
+  d   = model width (replicated activations)
+  B_l = per-rank batch, S = sequence
+  Attention weights are stored in the padded group-major head layout of
+  models.common.head_layout; padded q heads have zero wq/wo rows so the
+  function equals the unpadded architecture exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import HeadLayout, MeshInfo, ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Collective helpers
+# ---------------------------------------------------------------------------
+
+def psum_model(x, mi: MeshInfo):
+    return lax.psum(x, mi.model_axis) \
+        if (mi.model_size > 1 or mi.bound) else x
+
+
+def pmax_model(x, mi: MeshInfo):
+    return lax.pmax(x, mi.model_axis) \
+        if (mi.model_size > 1 or mi.bound) else x
+
+
+def model_rank(mi: MeshInfo):
+    return lax.axis_index(mi.model_axis) \
+        if (mi.model_size > 1 or mi.bound) else 0
+
+
+def pvary_init(x, mi: MeshInfo):
+    """Mark a freshly-created (zeros) scan carry as device-varying so
+    check_rep/vma-tracked shard_map accepts it as loop carry alongside
+    varying data (no-op outside shard_map)."""
+    axes = tuple(mi.data_axes) if (mi.data_size > 1 or mi.bound) else ()
+    if mi.model_size > 1 or mi.bound:
+        axes = axes + (mi.model_axis,)
+    if not axes:
+        return x
+    return jax.tree.map(lambda a: lax.pvary(a, axes), x)
+
+
+def gather_fsdp(p: Params, plan: Dict[str, Any], mi: MeshInfo) -> Params:
+    """All-gather FSDP-sharded parameter leaves along their sharded dim.
+
+    ``plan`` mirrors the structure of ``p``; each leaf is either -1
+    (replicated over data) or the int dim that is sharded over the data
+    axes.  AD transposes the gather into a reduce-scatter, which is exactly
+    ZeRO gradient semantics.
+    """
+    if mi.data_size <= 1 and not mi.bound:
+        return p
+
+    def gather_leaf(leaf, dim):
+        if dim is None or dim < 0:
+            return leaf
+        out = leaf
+        for ax in mi.data_axes:
+            out = lax.all_gather(out, ax, axis=dim, tiled=True)
+        return out
+
+    return jax.tree.map(gather_leaf, p, plan)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rms_norm_sharded(x, scale, eps: float, mi: MeshInfo, full_width: int):
+    """RMSNorm over a width-sharded activation (sum of squares via psum)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    ssq = psum_model(jnp.sum(x32 * x32, axis=-1, keepdims=True), mi)
+    var = ssq / full_width
+    return (x32 * lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def rope_tables(positions, hd: int, theta: float, dtype):
+    """positions (..., S) -> cos/sin (..., S, hd//2)."""
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, S, H, hd); cos/sin (B, S, hd//2) or (S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def sinusoid_pos_emb(S: int, d: int, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (1.0e4 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1.0e30
+
+
+def _mask_bias(sq, sk, q_off, mask_mode: str, prefix: int, dtype):
+    """(sq, sk) additive mask.  mask_mode: causal | full | prefix."""
+    if mask_mode == "full":
+        return jnp.zeros((sq, sk), dtype)
+    qi = q_off + jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    causal = kj <= qi
+    if mask_mode == "prefix":
+        causal = causal | (kj < prefix)
+    return jnp.where(causal, 0.0, NEG_INF).astype(dtype)
+
+
+def dense_attention(q, k, v, *, mask_mode="causal", prefix=0, q_off=0):
+    """q (B,S,G,Qg,D), k/v (B,T,G,D) -> (B,S,G,Qg,D).  fp32 softmax."""
+    B, S, G, Qg, D = q.shape
+    T = k.shape[1]
+    scale = D ** -0.5
+    scores = jnp.einsum("bsgqd,btgd->bgqst", q, k).astype(jnp.float32)
+    scores = scores * scale + _mask_bias(S, T, q_off, mask_mode, prefix,
+                                         jnp.float32)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgqst,btgd->bsgqd", p, v)
+
+
+def flash_attention(q, k, v, *, mask_mode="causal", prefix=0,
+                    chunk_q=1024, chunk_k=1024, static_steps=False,
+                    mi: Optional[MeshInfo] = None):
+    """Memory-bounded attention: scan over q chunks, inner fori over kv
+    chunks with online softmax.  Same signature/layout as dense_attention.
+
+    static_steps=True uses a fixed kv-chunk count (reverse-mode
+    differentiable; ~2x causal flops).  False skips above-diagonal chunks
+    (forward-only paths: prefill).
+    """
+    B, S, G, Qg, D = q.shape
+    T_real = k.shape[1]
+    cq = min(chunk_q, S)
+    ck = min(chunk_k, T_real)
+    assert S % cq == 0, (S, cq)
+    if T_real % ck:  # pad KV to a chunk multiple; padding is masked out
+        pad = ck - T_real % ck
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    T = k.shape[1]
+    nq, nk = S // cq, T // ck
+    scale = D ** -0.5
+    qr = q.reshape(B, nq, cq, G, Qg, D).transpose(1, 0, 2, 3, 4, 5)
+
+    def q_chunk(_, qi_q):
+        qi, qc = qi_q  # qc (B, cq, G, Qg, D)
+        q_off = qi * cq
+        m0 = jnp.full((B, G, Qg, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, Qg, cq), jnp.float32)
+        a0 = jnp.zeros((B, cq, G, Qg, D), jnp.float32)
+        if mi is not None:
+            m0, l0, a0 = pvary_init((m0, l0, a0), mi)
+
+        def kv_step(kj, carry):
+            m, l, acc = carry
+            ks = lax.dynamic_slice_in_dim(k, kj * ck, ck, axis=1)
+            vs = lax.dynamic_slice_in_dim(v, kj * ck, ck, axis=1)
+            s = jnp.einsum("bsgqd,btgd->bgqst", qc, ks).astype(jnp.float32)
+            s = s * scale
+            qi_idx = q_off + jnp.arange(cq)[:, None]
+            kj_idx = kj * ck + jnp.arange(ck)[None, :]
+            if mask_mode == "causal":
+                ok = kj_idx <= qi_idx
+            elif mask_mode == "prefix":
+                ok = (kj_idx <= qi_idx) | (kj_idx < prefix)
+            else:
+                ok = jnp.ones((cq, ck), bool)
+            ok = ok & (kj_idx < T_real)  # exclude KV padding
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bgqst,btgd->bsgqd", p.astype(q.dtype), vs).astype(jnp.float32)
+            return m_new, l_new, acc
+
+        if mask_mode == "causal" and not static_steps:
+            # only kv chunks up to the diagonal contribute
+            n_steps = qi + 1 if nq == nk else nk
+        else:
+            n_steps = nk
+        m, l, acc = lax.fori_loop(0, n_steps, kv_step, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = lax.scan(q_chunk, None, (jnp.arange(nq), qr))
+    # out (nq, B, cq, G, Qg, D) -> (B, S, G, Qg, D)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, G, Qg, D)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """q (B,1,G,Qg,D); caches (B,Smax,G,D); pos (B,) current index.
+    Attends positions <= pos."""
+    B, _, G, Qg, D = q.shape
+    Smax = k_cache.shape[1]
+    scale = D ** -0.5
+    s = jnp.einsum("bsgqd,btgd->bgqst", q, k_cache).astype(jnp.float32)
+    s = s * scale
+    ok = jnp.arange(Smax)[None, :] <= pos[:, None]  # (B, Smax)
+    s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgqst,btgd->bsgqd", p, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + TP collectives + cache plumbing)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AttnCache:
+    k: jax.Array  # (B, Smax, kv_local, hd)
+    v: jax.Array
+    pos: jax.Array  # (B,) int32 next write index
+
+
+def attn_project_qkv(p: Params, x, layout: HeadLayout, *, qkv_bias: bool):
+    B, S, _ = x.shape
+    hd = p["wq"].shape[1] // layout.hq_local
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, layout.hq_local, hd)
+    k = k.reshape(B, S, layout.kv_local, hd)
+    v = v.reshape(B, S, layout.kv_local, hd)
+    return q, k, v
+
+
+def _group_q(q, layout: HeadLayout):
+    """(B,S,Hql,hd) -> (B,S,G,Qg,hd) grouped by local kv head."""
+    B, S, Hql, hd = q.shape
+    return q.reshape(B, S, layout.kv_local, layout.ql_per_kv, hd)
+
+
+def attn_layer(
+    p: Params,
+    x,
+    mi: MeshInfo,
+    layout: HeadLayout,
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",          # train | prefill | decode
+    mask_mode: str = "causal",
+    prefix: int = 0,
+    positions=None,               # (B, S) absolute positions for RoPE
+    cache: Optional[AttnCache] = None,
+    use_rope: bool = True,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+):
+    """Full GQA attention layer.  Returns (out (B,S,d), new_cache | None)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q, k, v = attn_project_qkv(p, x, layout, qkv_bias=cfg.qkv_bias)
+    if kv_override is not None:
+        k, v = kv_override
+    if use_rope and kv_override is None:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        cos, sin = rope_tables(positions, hd, cfg.rope_theta, x.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        kc = jax.vmap(lambda c, u, i: lax.dynamic_update_slice_in_dim(
+            c, u, i, axis=0))(cache.k, k, cache.pos)
+        vc = jax.vmap(lambda c, u, i: lax.dynamic_update_slice_in_dim(
+            c, u, i, axis=0))(cache.v, v, cache.pos)
+        new_cache = AttnCache(k=kc, v=vc, pos=cache.pos + 1)
+        o = decode_attention(_group_q(q, layout), kc, vc, cache.pos)
+    else:
+        if mode == "prefill":
+            new_cache = AttnCache(
+                k=k, v=v, pos=jnp.full((B,), S, jnp.int32))
+        qg = _group_q(q, layout)
+        T = k.shape[1]
+        if max(S, T) > cfg.flash_threshold:
+            o = flash_attention(qg, k, v, mask_mode=mask_mode, prefix=prefix,
+                                static_steps=(mode == "train"), mi=mi)
+        else:
+            o = dense_attention(qg, k, v, mask_mode=mask_mode, prefix=prefix)
+    o = o.reshape(B, S, layout.hq_local * hd)
+    out = psum_model(o @ p["wo"], mi)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_glu(p: Params, x, mi: MeshInfo, *, gelu: bool = False,
+            psum: bool = True):
+    """SwiGLU / GeGLU with column-sharded gate+up, row-sharded down.
+    psum=False returns the partial (pre-reduction) output so the caller
+    can fuse several row-parallel reductions into one collective."""
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    act = jax.nn.gelu(g, approximate=True) if gelu else silu(g)
+    out = (act * u) @ p["w_down"]
+    return psum_model(out, mi) if psum else out
+
+
+def mlp_plain(p: Params, x, mi: MeshInfo):
+    """fc1 -> gelu -> fc2 (whisper-style)."""
+    h = jax.nn.gelu(x @ p["w_fc1"] + p["b_fc1"], approximate=True)
+    return psum_model(h @ p["w_fc2"], mi) + p["b_fc2"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (expert parallelism over the model axis)
+# ---------------------------------------------------------------------------
+
+def moe_layer(
+    p: Params,
+    x,
+    mi: MeshInfo,
+    cfg: ModelConfig,
+    *,
+    capacity_factor: float = 1.25,
+    gelu: bool = False,
+    psum: bool = True,
+):
+    """Sort-based grouped MoE.  Experts are sharded over the model axis;
+    activations are replicated over it (Megatron invariant), so each rank
+    routes *locally* to its own expert shard and a single psum merges
+    expert outputs — the same collective pattern as a row-parallel matmul,
+    no all-to-all required (DESIGN.md section 5).
+
+    p: w_router (d, E) replicated; w_gate/w_up (E_local, d, f);
+       w_down (E_local, f, d).
+    x: (B, S, d) replicated over model.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_local = p["w_gate"].shape[0]
+    N = B * S
+    xf = x.reshape(N, d)
+
+    logits = (xf @ p["w_router"]).astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = lax.top_k(probs, k)  # (N, k)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    r = model_rank(mi)
+    e_start = r * E_local
+    flat_e = top_idx.reshape(N * k)
+    flat_w = top_vals.reshape(N * k).astype(x.dtype)
+    flat_tok = jnp.repeat(jnp.arange(N), k)
+
+    local_e = flat_e - e_start
+    mine = (local_e >= 0) & (local_e < E_local)
+    key = jnp.where(mine, local_e, E_local)  # non-mine -> overflow bucket
+    order = jnp.argsort(key)
+    s_key = key[order]
+    s_tok = flat_tok[order]
+    s_w = flat_w[order]
+
+    C = int(capacity_factor * k * N / E) + 1
+    counts = jnp.bincount(key, length=E_local + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(N * k) - starts[s_key]
+    keep = (s_key < E_local) & (pos < C)
+    slot = jnp.where(keep, s_key * C + pos, 0)
+
+    xb = jnp.zeros((E_local * C, d), x.dtype)
+    xb = xb.at[slot].add(jnp.where(keep[:, None], xf[s_tok], 0.0))
+    xb = xb.reshape(E_local, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", xb, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xb, p["w_up"])
+    act = jax.nn.gelu(g, approximate=True) if gelu else silu(g)
+    yb = jnp.einsum("ecf,efd->ecd", act * u, p["w_down"])
+    yb = yb.reshape(E_local * C, d)
+
+    y = jnp.zeros((N, d), x.dtype)
+    contrib = yb[slot] * (s_w * keep.astype(x.dtype))[:, None]
+    y = y.at[s_tok].add(contrib)
+    if psum:
+        y = psum_model(y, mi)
+
+    aux = _load_balance_loss(probs, top_idx, E)
+    # mean over data shards: the right global statistic, and it keeps the
+    # aux scan-carry device-invariant under vma-tracked shard_map
+    if mi.data_size > 1 or mi.bound:
+        aux = lax.psum(aux, mi.data_axes) / mi.data_size
+    return y.reshape(B, S, d), aux
+
+
+def _load_balance_loss(probs, top_idx, E):
+    """Switch-style auxiliary load-balancing loss (replicated compute)."""
+    N, k = top_idx.shape
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)  # (N, k, E)
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # (E,)
+    frac_probs = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs) / k
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SSMCache:
+    state: jax.Array   # (B, H_local, d_state, P)
+    conv_x: jax.Array  # (B, K-1, d_inner_local) - model-sharded channels
+    conv_B: jax.Array  # (B, K-1, N) - replicated
+    conv_C: jax.Array  # (B, K-1, N) - replicated
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv.  x (B,S,C), w (K,C).  With a cache (B,K-1,C)
+    performs streaming update (S==1) and returns (y, new_cache)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+        return y, None
+    xp = jnp.concatenate([cache, x], axis=1)  # (B, K-1+1, C)
+    y = sum(xp[:, i:i + 1, :] * w[i] for i in range(K))
+    return y, xp[:, 1:, :]
+
+
+def _segsum_decay(da):
+    """da (..., Q) per-step log-decays -> (..., Q, Q) lower-triangular
+    exp(cumsum_i - cumsum_j) factors (j <= i).
+
+    Mask BEFORE exponentiating: the j > i entries have positive diff that
+    can overflow exp, and where(mask, inf, 0) produces 0*inf = NaN in the
+    backward pass."""
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    Q = da.shape[-1]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(tri, diff, -jnp.inf)
+    return jnp.exp(jnp.minimum(diff, 0.0))
+
+
+def ssd_chunked(xs, dt, A, Bc, Cc, chunk: int, unroll: bool = False,
+                mi: Optional[MeshInfo] = None):
+    """Chunked state-space duality scan (Mamba2 alg. 1, fp32 state).
+
+    xs (B,S,H,P), dt (B,S,H) [post-softplus], A (H,) [negative],
+    Bc/Cc (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    B, S, H, P = xs.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    xs_ = xs.reshape(B, nc, Q, H, P)
+    dt_ = dt.reshape(B, nc, Q, H)
+    Bc_ = Bc.reshape(B, nc, Q, N)
+    Cc_ = Cc.reshape(B, nc, Q, N)
+
+    da = (dt_ * A[None, None, None, :]).astype(jnp.float32)  # (B,nc,Q,H)
+    da_h = jnp.moveaxis(da, -1, 2)  # (B, nc, H, Q)
+    Lmat = _segsum_decay(da_h)      # (B, nc, H, Q, Q)
+    cs = jnp.cumsum(da_h, axis=-1)  # (B, nc, H, Q)
+    total = cs[..., -1]             # (B, nc, H)
+
+    # Intra-chunk (quadratic within the chunk, like a masked attention):
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc_.astype(jnp.float32),
+                    Bc_.astype(jnp.float32))
+    M = CB[:, :, None] * Lmat  # (B, nc, H, Q, Q)
+    Mdt = M * jnp.moveaxis(dt_, -1, 2)[..., None, :].astype(jnp.float32)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", Mdt,
+                         xs_.astype(jnp.float32))
+
+    # Chunk state contribution: sum_j exp(cs_last - cs_j) dt_j B_j x_j^T
+    w = jnp.exp(total[..., None] - cs) * jnp.moveaxis(dt_, -1, 2)
+    Sc = jnp.einsum("bchj,bcjn,bcjhp->bchnp", w.astype(jnp.float32),
+                    Bc_.astype(jnp.float32), xs_.astype(jnp.float32))
+
+    decay_chunk = jnp.exp(total)  # (B, nc, H)
+
+    def chunk_step(state, inp):
+        Sc_c, dec_c, Cc_c, cs_c = inp
+        # inter-chunk output from the incoming state
+        y_in = jnp.einsum("bin,bhnp->bihp", Cc_c.astype(jnp.float32), state)
+        y_in = y_in * jnp.exp(jnp.moveaxis(cs_c, 1, -1))[..., None]
+        state = state * dec_c[..., None, None] + Sc_c
+        return state, y_in
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    if mi is not None:
+        state0 = pvary_init(state0, mi)
+    xs_scan = (
+        jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(decay_chunk, 1, 0),
+        jnp.moveaxis(Cc_, 1, 0), jnp.moveaxis(cs, 1, 0),
+    )
+    state, y_inter = lax.scan(chunk_step, state0, xs_scan,
+                              unroll=unroll or 1)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)  # (B, nc, Q, H, P)
+    y = (y_intra + y_inter).reshape(B, S, H, P).astype(xs.dtype)
+    return y, state
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD recurrence.  state (B,H,N,P) fp32; x_t (B,H,P);
+    dt_t (B,H); B_t/C_t (B,N)."""
+    dec = jnp.exp((dt_t * A[None, :]).astype(jnp.float32))  # (B,H)
+    upd = jnp.einsum("bn,bhp->bhnp", B_t.astype(jnp.float32),
+                     (x_t * dt_t[..., None]).astype(jnp.float32))
+    state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), state)
+    return state, y.astype(x_t.dtype)
+
+
+def mamba2_layer(
+    p: Params,
+    x,
+    mi: MeshInfo,
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",
+    cache: Optional[SSMCache] = None,
+):
+    """Mamba2 block, heads sharded over the model axis.
+
+    p: w_z/w_x (d, di_local), w_B/w_C (d, N) [replicated], w_dt (d, H_local),
+       dt_bias (H_local,), A_log (H_local,), D (H_local,),
+       conv_x (K, di_local), conv_B/conv_C (K, N), norm (di_local,),
+       w_out (di_local, d).
+    Returns (out (B,S,d), new_cache | None).
+    """
+    B, S, d = x.shape
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    di_l = p["w_x"].shape[1]
+    H_l = di_l // P
+
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bc = x @ p["w_B"]
+    Cc = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H_l,)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        xs, new_cx = _causal_conv(xs, p["conv_x"], cache.conv_x)
+        Bc, new_cB = _causal_conv(Bc, p["conv_B"], cache.conv_B)
+        Cc, new_cC = _causal_conv(Cc, p["conv_C"], cache.conv_C)
+        xs, Bc, Cc = silu(xs), silu(Bc), silu(Cc)
+        x_t = xs.reshape(B, H_l, P)
+        state, y = ssd_decode_step(
+            cache.state, x_t, dt.reshape(B, H_l), A,
+            Bc.reshape(B, N), Cc.reshape(B, N))
+        y = y + x_t * p["D"][None, :, None]
+        y = y.reshape(B, 1, di_l)
+        new_cache = SSMCache(state=state, conv_x=new_cx, conv_B=new_cB,
+                             conv_C=new_cC)
+    else:
+        xs, _ = _causal_conv(xs, p["conv_x"])
+        Bc, _ = _causal_conv(Bc, p["conv_B"])
+        Cc, _ = _causal_conv(Cc, p["conv_C"])
+        xs, Bc, Cc = silu(xs), silu(Bc), silu(Cc)
+        xs_h = xs.reshape(B, S, H_l, P)
+        y, state = ssd_chunked(xs_h, dt, A, Bc, Cc, cfg.ssm_chunk,
+                               unroll=cfg.scan_unroll, mi=mi)
+        y = y + xs_h * p["D"][None, None, :, None]
+        y = y.reshape(B, S, di_l)
+        new_cache = None
+        if mode == "prefill":
+            # carry the last K-1 pre-conv inputs for streaming decode
+            k1 = cfg.ssm_conv - 1
+            new_cache = SSMCache(
+                state=state,
+                conv_x=(x @ p["w_x"])[:, -k1:, :],
+                conv_B=(x @ p["w_B"])[:, -k1:, :],
+                conv_C=(x @ p["w_C"])[:, -k1:, :])
+
+    # gated RMSNorm over the (sharded) inner width, then row-parallel out
+    y = y * silu(z)
+    y = rms_norm_sharded(y, p["norm"], cfg.norm_eps, mi, cfg.d_inner)
+    out = psum_model(y @ p["w_out"], mi)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded embedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_lookup(table, ids, mi: MeshInfo):
+    """table (V_local, d) vocab-sharded over model; ids (B, S) global."""
+    V_local = table.shape[0]
+    r = model_rank(mi)
+    loc = ids - r * V_local
+    ok = (loc >= 0) & (loc < V_local)
+    loc = jnp.clip(loc, 0, V_local - 1)
+    out = jnp.take(table, loc, axis=0)
+    out = jnp.where(ok[..., None], out, 0.0)
+    return psum_model(out, mi)
+
+
+def lm_head_loss(h, table, labels, mi: MeshInfo, *, vocab_real: int,
+                 z_weight: float = 0.0):
+    """Cross-entropy with vocab-sharded logits (never materialises the full
+    softmax).  h (B,S,d); table (V_local, d); labels (B,S) with -1 = pad.
+    Returns (mean_loss, n_tokens)."""
+    B, S, d = h.shape
+    V_local = table.shape[0]
+    r = model_rank(mi)
+    hf = h.reshape(B * S, d)
+    logits = (hf @ table.T).astype(jnp.float32)  # (N, V_local)
+    gid = r * V_local + jnp.arange(V_local)
+    logits = jnp.where((gid < vocab_real)[None, :], logits, NEG_INF)
+
+    lab = labels.reshape(B * S)
+    valid = lab >= 0
+    lab = jnp.where(valid, lab, 0)
+
+    # stability max carries no gradient (it cancels in the lse identity)
+    mloc = lax.stop_gradient(jnp.max(logits, axis=-1))
+    m = lax.stop_gradient(pmax_model(mloc, mi))
+    se = jnp.sum(jnp.exp(logits - m[:, None]), axis=-1)
+    lse = m + jnp.log(psum_model(se, mi))
+
+    loc = lab - r * V_local
+    ok = (loc >= 0) & (loc < V_local)
+    loc = jnp.clip(loc, 0, V_local - 1)
+    lab_logit = psum_model(
+        jnp.where(ok, jnp.take_along_axis(
+            logits, loc[:, None], axis=1)[:, 0], 0.0), mi)
+
+    loss = (lse - lab_logit) * valid
+    if z_weight:
+        loss = loss + z_weight * (lse * valid) ** 2
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(loss) / n, n
+
+
+def lm_head_logits(h, table, mi: MeshInfo, *, vocab_real: int):
+    """Full (gathered) logits for serving.  h (B, S, d) -> (B, S, V_pad)."""
+    logits = jnp.einsum("bsd,vd->bsv", h, table).astype(jnp.float32)
+    if mi.model_size > 1:
+        logits = lax.all_gather(logits, mi.model_axis, axis=-1, tiled=True)
+    V = logits.shape[-1]
+    gid = jnp.arange(V)
+    return jnp.where((gid < vocab_real)[None, None, :], logits, NEG_INF)

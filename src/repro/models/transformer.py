@@ -1,0 +1,1173 @@
+"""Model families: decoder LM (dense / MoE / VLM), encoder-decoder,
+Mamba2 SSM and hybrid (Mamba2 + shared attention).
+
+Every family exposes the same surface:
+
+    model = build_model(cfg, mi)
+    params = model.init(key)            # global arrays (or eval_shape'd)
+    specs  = model.param_specs()        # PartitionSpec tree (same structure)
+    model.loss(params_local, batch)     # per-rank, inside shard_map
+    model.prefill(params_local, batch)  # -> (last_logits, cache)
+    model.decode(params_local, batch, cache)  # -> (logits, cache)
+    model.init_cache(B, Smax) / model.cache_specs(batch_sharded)
+
+Layers are stacked on a leading L axis and scanned (`lax.scan`) so HLO size
+is O(1 layer); each block body is rematerialised (`jax.checkpoint`) when
+cfg.remat.  FSDP leaves are all-gathered per layer inside the scan body
+(gather_fsdp), which AD turns into per-layer reduce-scatter of grads
+(ZeRO semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.common import (
+    HeadLayout, MeshInfo, ModelConfig, fsdp_dim, head_layout, pad_vocab,
+    q_head_permutation,
+)
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _norm_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def _dense_init(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+class _KeyGen:
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+
+# ---------------------------------------------------------------------------
+# Attention block param builders (shared by all attention-bearing families)
+# ---------------------------------------------------------------------------
+
+def attn_param_shapes(cfg: ModelConfig, lay: HeadLayout, n_layers: int):
+    d, hd = cfg.d_model, cfg.hd
+    sh = {
+        "wq": (n_layers, d, lay.h_pad * hd),
+        "wk": (n_layers, d, lay.kv_total * hd),
+        "wv": (n_layers, d, lay.kv_total * hd),
+        "wo": (n_layers, lay.h_pad * hd, d),
+    }
+    if cfg.qkv_bias:
+        sh["bq"] = (n_layers, lay.h_pad * hd)
+        sh["bk"] = (n_layers, lay.kv_total * hd)
+        sh["bv"] = (n_layers, lay.kv_total * hd)
+    return sh
+
+
+def attn_param_specs(cfg: ModelConfig, stacked: bool = True):
+    n = (None,) if stacked else ()
+    sp = {
+        "wq": P(*n, None, "model"),
+        "wk": P(*n, None, "model"),
+        "wv": P(*n, None, "model"),
+        "wo": P(*n, "model", None),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = P(*n, "model")
+        sp["bk"] = P(*n, "model")
+        sp["bv"] = P(*n, "model")
+    return sp
+
+
+def init_attn_params(kg: _KeyGen, cfg: ModelConfig, lay: HeadLayout,
+                     n_layers: int, out_scale: float):
+    """Random init with (a) zero columns/rows for padded q heads so the
+    padded layout computes exactly the real architecture, (b) KV weights
+    generated once per real head and *tiled* across replicating ranks so
+    duplicates start (and, with grad sync, stay) identical."""
+    d, hd = cfg.d_model, cfg.hd
+    dt = _dt(cfg)
+    perm = jnp.asarray(q_head_permutation(lay))  # (h_pad,) -> real or -1
+    qmask = (perm >= 0).astype(dt)
+
+    wq = _dense_init(kg(), (n_layers, d, lay.h_pad, hd), dt)
+    wq = (wq * qmask[None, None, :, None]).reshape(n_layers, d, -1)
+    wo = _dense_init(kg(), (n_layers, lay.h_pad, hd, d), dt, out_scale)
+    wo = (wo * qmask[None, :, None, None]).reshape(n_layers, -1, d)
+
+    def kv(key):
+        real = _dense_init(key, (n_layers, d, lay.n_kv, hd), dt)
+        w = jnp.repeat(real, lay.kv_total // lay.n_kv, axis=2)
+        return w.reshape(n_layers, d, -1)
+
+    p = {"wq": wq, "wk": kv(kg()), "wv": kv(kg()), "wo": wo}
+    if cfg.qkv_bias:
+        bq = _dense_init(kg(), (n_layers, lay.h_pad, hd), dt)
+        p["bq"] = (bq * qmask[None, :, None]).reshape(n_layers, -1)
+        for nm in ("bk", "bv"):
+            real = _dense_init(kg(), (n_layers, lay.n_kv, hd), dt)
+            p[nm] = jnp.repeat(real, lay.kv_total // lay.n_kv,
+                               axis=1).reshape(n_layers, -1)
+    return p
+
+
+def kv_duplication(cfg: ModelConfig, lay: HeadLayout) -> Dict[str, int]:
+    """Param-name -> replication factor for cross-duplicate grad averaging
+    (see optim.sync_duplicated_grads)."""
+    rep = lay.kv_total // lay.n_kv
+    if rep <= 1:
+        return {}
+    names = ["wk", "wv"] + (["bk", "bv"] if cfg.qkv_bias else [])
+    return {n: rep for n in names}
+
+
+# ---------------------------------------------------------------------------
+# Base class
+# ---------------------------------------------------------------------------
+
+class BaseModel:
+    def __init__(self, cfg: ModelConfig, mi: MeshInfo):
+        self.cfg = cfg
+        self.mi = mi
+        self.tp = mi.model_size
+        self.v_pad = pad_vocab(cfg.vocab, self.tp)
+        self.fsdp_size = mi.data_size if cfg.fsdp else 1
+
+    # -- fsdp plans ---------------------------------------------------------
+    def _plan(self, shapes: Dict[str, Tuple[int, ...]],
+              specs: Dict[str, P], stacked: bool,
+              min_elems: Optional[int] = None) -> Dict[str, Any]:
+        """Plan dims are in *sliced per-layer, per-model-rank local*
+        coordinates (what gather_fsdp sees inside the scan body).
+        -1 = not FSDP-sharded (replicated over data)."""
+        import math as _math
+        if min_elems is None:
+            min_elems = self.cfg.fsdp_min_elems
+        plan = {}
+        for name, shape in shapes.items():
+            if self.fsdp_size <= 1:
+                plan[name] = -1
+                continue
+            spec = specs[name]
+            local = list(shape)
+            skip = set()
+            for i, ax in enumerate(tuple(spec)):
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                if "model" in axes:
+                    local[i] //= self.tp
+                    skip.add(i)
+            if stacked:
+                local = local[1:]
+                skip = {i - 1 for i in skip if i > 0}
+                skip.add(-99)  # nothing
+            if _math.prod(local) < min_elems:
+                plan[name] = -1
+                continue
+            dim = fsdp_dim(tuple(local), self.fsdp_size,
+                           skip_dims=tuple(skip))
+            plan[name] = -1 if dim is None else dim
+        return plan
+
+    def _merge_fsdp_specs(self, specs: Dict[str, P], plans: Dict[str, Any],
+                          shapes: Dict[str, Tuple[int, ...]],
+                          offset: int) -> Dict[str, P]:
+        """Insert the data-axes FSDP sharding into the model-parallel spec
+        at the plan's dim (+offset for the stacked-L dim)."""
+        if self.fsdp_size <= 1:
+            return specs
+        out = {}
+        for name, sp in specs.items():
+            dim = plans.get(name, -1)
+            if dim is None or dim < 0:
+                out[name] = sp
+                continue
+            g = dim + offset
+            rank = len(shapes[name])
+            entries = list(sp) + [None] * (rank - len(tuple(sp)))
+            assert entries[g] is None, (name, entries, g)
+            entries[g] = self.mi.data_axes
+            out[name] = P(*entries)
+        return out
+
+    def full_param_specs(self):
+        """param_specs() with FSDP data-axis sharding merged in."""
+        raise NotImplementedError
+
+    def loss(self, params, batch):  # per-rank
+        raise NotImplementedError
+
+    def prefill(self, params, batch):
+        raise NotImplementedError
+
+    def decode(self, params, batch, cache):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM: dense / MoE / VLM (prefix-LM)
+# ---------------------------------------------------------------------------
+
+class DecoderLM(BaseModel):
+    def __init__(self, cfg: ModelConfig, mi: MeshInfo):
+        super().__init__(cfg, mi)
+        self.lay = head_layout(cfg, self.tp)
+        self.e_local = cfg.n_experts // self.tp if cfg.n_experts else 0
+        if cfg.n_experts and cfg.n_experts % self.tp:
+            raise ValueError(f"{cfg.name}: n_experts % tp != 0")
+
+    # -- params -------------------------------------------------------------
+    def _block_shapes(self):
+        cfg, lay, Lr = self.cfg, self.lay, self.cfg.n_layers
+        d, f = cfg.d_model, cfg.d_ff
+        sh = dict(attn_param_shapes(cfg, lay, Lr))
+        sh["ln1"] = (Lr, d)
+        sh["ln2"] = (Lr, d)
+        if cfg.n_experts:
+            sh["w_router"] = (Lr, d, cfg.n_experts)
+            sh["w_gate"] = (Lr, cfg.n_experts, d, f)
+            sh["w_up"] = (Lr, cfg.n_experts, d, f)
+            sh["w_down"] = (Lr, cfg.n_experts, f, d)
+            if cfg.moe_dense_ff:
+                df = cfg.moe_dense_ff
+                sh["dw_gate"] = (Lr, d, df)
+                sh["dw_up"] = (Lr, d, df)
+                sh["dw_down"] = (Lr, df, d)
+        else:
+            sh["w_gate"] = (Lr, d, f)
+            sh["w_up"] = (Lr, d, f)
+            sh["w_down"] = (Lr, f, d)
+        return sh
+
+    def _block_specs(self):
+        cfg = self.cfg
+        sp = dict(attn_param_specs(cfg))
+        sp["ln1"] = P(None, None)
+        sp["ln2"] = P(None, None)
+        if cfg.n_experts:
+            sp["w_router"] = P(None, None, None)
+            sp["w_gate"] = P(None, "model", None, None)
+            sp["w_up"] = P(None, "model", None, None)
+            sp["w_down"] = P(None, "model", None, None)
+            if cfg.moe_dense_ff:
+                sp["dw_gate"] = P(None, None, "model")
+                sp["dw_up"] = P(None, None, "model")
+                sp["dw_down"] = P(None, "model", None)
+        else:
+            sp["w_gate"] = P(None, None, "model")
+            sp["w_up"] = P(None, None, "model")
+            sp["w_down"] = P(None, "model", None)
+        return sp
+
+    def param_specs(self):
+        sp = {
+            "emb": P("model", None),
+            "lm_head": P("model", None),
+            "final_norm": P(None),
+            "blocks": self._block_specs(),
+        }
+        if self.cfg.family == "vlm":
+            sp["vis_proj"] = P(None, "model")
+            sp["vis_out"] = P("model", None)
+        return sp
+
+    def block_plan(self):
+        return self._plan(self._block_shapes(), self._block_specs(),
+                          stacked=True)
+
+    def top_plan(self):
+        shapes = {"emb": (self.v_pad, self.cfg.d_model),
+                  "lm_head": (self.v_pad, self.cfg.d_model)}
+        specs = {"emb": P("model", None), "lm_head": P("model", None)}
+        return self._plan(shapes, specs, stacked=False)
+
+    def init(self, key):
+        cfg, lay = self.cfg, self.lay
+        kg = _KeyGen(key)
+        dt = _dt(cfg)
+        d, f, Lr = cfg.d_model, cfg.d_ff, cfg.n_layers
+        out_scale = 0.02 / (2 * Lr) ** 0.5
+        blocks: Params = init_attn_params(kg, cfg, lay, Lr, out_scale)
+        blocks["ln1"] = _norm_init(kg(), (Lr, d), dt)
+        blocks["ln2"] = _norm_init(kg(), (Lr, d), dt)
+        if cfg.n_experts:
+            E = cfg.n_experts
+            blocks["w_router"] = _dense_init(kg(), (Lr, d, E), dt)
+            blocks["w_gate"] = _dense_init(kg(), (Lr, E, d, f), dt)
+            blocks["w_up"] = _dense_init(kg(), (Lr, E, d, f), dt)
+            blocks["w_down"] = _dense_init(kg(), (Lr, E, f, d), dt, out_scale)
+            if cfg.moe_dense_ff:
+                df = cfg.moe_dense_ff
+                blocks["dw_gate"] = _dense_init(kg(), (Lr, d, df), dt)
+                blocks["dw_up"] = _dense_init(kg(), (Lr, d, df), dt)
+                blocks["dw_down"] = _dense_init(kg(), (Lr, df, d), dt,
+                                                out_scale)
+        else:
+            blocks["w_gate"] = _dense_init(kg(), (Lr, d, f), dt)
+            blocks["w_up"] = _dense_init(kg(), (Lr, d, f), dt)
+            blocks["w_down"] = _dense_init(kg(), (Lr, f, d), dt, out_scale)
+        p = {
+            "emb": _dense_init(kg(), (self.v_pad, d), dt),
+            "lm_head": _dense_init(kg(), (self.v_pad, d), dt),
+            "final_norm": _norm_init(kg(), (d,), dt),
+            "blocks": blocks,
+        }
+        if cfg.family == "vlm":
+            p["vis_proj"] = _dense_init(kg(), (d, d), dt)
+            p["vis_out"] = _dense_init(kg(), (d, d), dt)
+        return p
+
+    def kv_duplication(self):
+        return {f"blocks/{k}": v
+                for k, v in kv_duplication(self.cfg, self.lay).items()}
+
+    def _top_shapes(self):
+        return {"emb": (self.v_pad, self.cfg.d_model),
+                "lm_head": (self.v_pad, self.cfg.d_model)}
+
+    def full_param_specs(self):
+        sp = self.param_specs()
+        sp["blocks"] = self._merge_fsdp_specs(
+            sp["blocks"], self.block_plan(), self._block_shapes(), offset=1)
+        top = self._merge_fsdp_specs(
+            {"emb": sp["emb"], "lm_head": sp["lm_head"]}, self.top_plan(),
+            self._top_shapes(), offset=0)
+        sp.update(top)
+        return sp
+
+    # -- forward ------------------------------------------------------------
+    def _block(self, p, h, *, mode, mask_mode, prefix, positions, cache):
+        cfg, mi = self.cfg, self.mi
+        p = L.gather_fsdp(p, self.block_plan(), mi)
+        a, new_cache = L.attn_layer(
+            p, L.rms_norm(h, p["ln1"], cfg.norm_eps), mi, self.lay, cfg,
+            mode=mode, mask_mode=mask_mode, prefix=prefix,
+            positions=positions, cache=cache)
+        h = h + a
+        hn = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.n_experts:
+            # capacity policy: training tolerates drops (GShard cf=1.25);
+            # serving must not drop tokens — decode uses worst-case
+            # capacity (token counts are tiny), prefill a generous 8x.
+            cf = (1.25 if mode == "train"
+                  else float(cfg.n_experts) if mode == "decode" else 8.0)
+            if cfg.moe_dense_ff:
+                # fused-residual reduction: the MoE combine and the dense
+                # residual FFN add into the same residual stream, so their
+                # partial (row-parallel) outputs are summed locally and
+                # reduced with ONE psum instead of two (EXPERIMENTS.md
+                # section Perf, arctic-480b iteration).
+                y, aux = L.moe_layer(p, hn, mi, cfg, gelu=cfg.gelu_glu,
+                                     psum=False, capacity_factor=cf)
+                dp = {"w_gate": p["dw_gate"], "w_up": p["dw_up"],
+                      "w_down": p["dw_down"]}
+                y = y + L.mlp_glu(dp, hn, mi, gelu=cfg.gelu_glu, psum=False)
+                y = L.psum_model(y, mi)
+            else:
+                y, aux = L.moe_layer(p, hn, mi, cfg, gelu=cfg.gelu_glu,
+                                     capacity_factor=cf)
+        else:
+            y = L.mlp_glu(p, hn, mi, gelu=cfg.gelu_glu)
+        return h + y, aux, new_cache
+
+    def _trunk(self, params, h, *, mode, mask_mode, prefix, positions,
+               caches=None):
+        """Scan the block stack.  caches: stacked (L, ...) pytree or None."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h, aux = carry
+            if caches is not None:
+                p_l, cache_l = xs
+                cache_l = L.AttnCache(**cache_l)
+            else:
+                p_l, cache_l = xs, None
+            h, aux_l, new_cache = self._block(
+                p_l, h, mode=mode, mask_mode=mask_mode, prefix=prefix,
+                positions=positions, cache=cache_l)
+            out = ({"k": new_cache.k, "v": new_cache.v, "pos": new_cache.pos}
+                   if new_cache is not None else None)
+            return (h, aux + aux_l), out
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = (params["blocks"], caches) if caches is not None \
+            else params["blocks"]
+        (h, aux), new_caches = lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                        xs, unroll=cfg.scan_unroll or 1)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return h, aux, new_caches
+
+    def _embed(self, params, ids):
+        cfg, mi = self.cfg, self.mi
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        h = L.embed_lookup(emb, ids, mi)
+        if cfg.embed_scale:
+            h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+        return h
+
+    def _inputs(self, params, batch):
+        """Token embedding (+ VLM patch prefix).  Returns (h, prefix_len,
+        positions)."""
+        cfg, mi = self.cfg, self.mi
+        ids = batch["tokens"]
+        h = self._embed(params, ids)
+        prefix = 0
+        if cfg.family == "vlm" and "patches" in batch:
+            vp = params["vis_proj"]
+            if mi.model_size > 1:
+                # column-sharded projector + row-sharded output proj
+                pe = batch["patches"] @ vp          # (B, P, d/tp)
+                pe = L.psum_model(pe @ params["vis_out"], mi)
+            else:
+                pe = batch["patches"] @ vp @ params["vis_out"]
+            h = jnp.concatenate([pe.astype(h.dtype), h], axis=1)
+            prefix = batch["patches"].shape[1]
+        B, S = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return h, prefix, positions
+
+    def loss(self, params, batch):
+        cfg, mi = self.cfg, self.mi
+        h, prefix, pos = self._inputs(params, batch)
+        mask_mode = "prefix" if cfg.family == "vlm" else "causal"
+        h, aux, _ = self._trunk(params, h, mode="train",
+                                mask_mode=mask_mode, prefix=prefix,
+                                positions=pos)
+        labels = batch["labels"]
+        if prefix:
+            pad = jnp.full((labels.shape[0], prefix), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        head = L.gather_fsdp({"lm_head": params["lm_head"]},
+                             {"lm_head": self.top_plan()["lm_head"]},
+                             mi)["lm_head"]
+        loss, n = L.lm_head_loss(h, head, labels, mi, vocab_real=cfg.vocab)
+        return loss + 0.01 * aux / max(cfg.n_layers, 1), {
+            "ce": loss, "aux": aux, "tokens": n}
+
+    def prefill(self, params, batch):
+        cfg, mi = self.cfg, self.mi
+        h, prefix, pos = self._inputs(params, batch)
+        mask_mode = "prefix" if cfg.family == "vlm" else "causal"
+        h, _, caches = self._trunk(params, h, mode="prefill",
+                                   mask_mode=mask_mode, prefix=prefix,
+                                   positions=pos)
+        head = L.gather_fsdp({"lm_head": params["lm_head"]},
+                             {"lm_head": self.top_plan()["lm_head"]},
+                             mi)["lm_head"]
+        logits = L.lm_head_logits(h[:, -1:], head, mi, vocab_real=cfg.vocab)
+        return logits[:, 0], caches
+
+    def decode(self, params, batch, caches):
+        cfg, mi = self.cfg, self.mi
+        h = self._embed(params, batch["token"])
+        if cfg.embed_scale:
+            pass  # applied in _embed
+        pos = batch["pos"][:, None]
+        h, _, new_caches = self._trunk(params, h, mode="decode",
+                                       mask_mode="causal", prefix=0,
+                                       positions=pos, caches=caches)
+        head = L.gather_fsdp({"lm_head": params["lm_head"]},
+                             {"lm_head": self.top_plan()["lm_head"]},
+                             mi)["lm_head"]
+        logits = L.lm_head_logits(h, head, mi, vocab_real=cfg.vocab)
+        return logits[:, 0], new_caches
+
+    # -- caches -------------------------------------------------------------
+    def init_cache(self, B: int, s_max: int):
+        cfg, lay = self.cfg, self.lay
+        dt = _dt(cfg)
+        Lr = cfg.n_layers
+        kv_total = lay.kv_total
+        return {
+            "k": jnp.zeros((Lr, B, s_max, kv_total, cfg.hd), dt),
+            "v": jnp.zeros((Lr, B, s_max, kv_total, cfg.hd), dt),
+            "pos": jnp.zeros((Lr, B), jnp.int32),
+        }
+
+    def cache_specs(self, batch_axes):
+        return {
+            "k": P(None, batch_axes, None, "model", None),
+            "v": P(None, batch_axes, None, "model", None),
+            "pos": P(None, batch_axes),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSM LM
+# ---------------------------------------------------------------------------
+
+class SSMLM(BaseModel):
+    def __init__(self, cfg: ModelConfig, mi: MeshInfo):
+        super().__init__(cfg, mi)
+        if cfg.ssm_heads % self.tp:
+            raise ValueError(f"{cfg.name}: ssm heads % tp != 0")
+
+    def _block_shapes(self):
+        cfg, Lr = self.cfg, self.cfg.n_layers
+        d, di, N, H, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                          cfg.ssm_heads, cfg.ssm_conv)
+        return {
+            "ln": (Lr, d),
+            "w_z": (Lr, d, di), "w_x": (Lr, d, di),
+            "w_B": (Lr, d, N), "w_C": (Lr, d, N),
+            "w_dt": (Lr, d, H), "dt_bias": (Lr, H),
+            "A_log": (Lr, H), "D": (Lr, H),
+            "conv_x": (Lr, K, di), "conv_B": (Lr, K, N), "conv_C": (Lr, K, N),
+            "norm": (Lr, di), "w_out": (Lr, di, d),
+        }
+
+    def _block_specs(self):
+        return {
+            "ln": P(None, None),
+            "w_z": P(None, None, "model"), "w_x": P(None, None, "model"),
+            "w_B": P(None, None, None), "w_C": P(None, None, None),
+            "w_dt": P(None, None, "model"), "dt_bias": P(None, "model"),
+            "A_log": P(None, "model"), "D": P(None, "model"),
+            "conv_x": P(None, None, "model"),
+            "conv_B": P(None, None, None), "conv_C": P(None, None, None),
+            "norm": P(None, "model"), "w_out": P(None, "model", None),
+        }
+
+    def param_specs(self):
+        return {
+            "emb": P("model", None), "lm_head": P("model", None),
+            "final_norm": P(None), "blocks": self._block_specs(),
+        }
+
+    def block_plan(self):
+        return self._plan(self._block_shapes(), self._block_specs(),
+                          stacked=True)
+
+    def top_plan(self):
+        shapes = {"emb": (self.v_pad, self.cfg.d_model),
+                  "lm_head": (self.v_pad, self.cfg.d_model)}
+        specs = {"emb": P("model", None), "lm_head": P("model", None)}
+        return self._plan(shapes, specs, stacked=False)
+
+    def init(self, key):
+        cfg = self.cfg
+        kg = _KeyGen(key)
+        dt = _dt(cfg)
+        out = {}
+        for name, shape in self._block_shapes().items():
+            if name in ("ln", "norm"):
+                out[name] = _norm_init(kg(), shape, dt)
+            elif name == "A_log":
+                out[name] = jnp.log(jnp.broadcast_to(
+                    jnp.linspace(1.0, 16.0, shape[1]), shape)).astype(
+                        jnp.float32)
+            elif name == "dt_bias":
+                out[name] = jnp.full(shape, 0.5, jnp.float32)
+            elif name == "D":
+                out[name] = jnp.ones(shape, dt)
+            elif name == "w_out":
+                out[name] = _dense_init(kg(), shape, dt,
+                                        0.02 / (2 * cfg.n_layers) ** 0.5)
+            else:
+                out[name] = _dense_init(kg(), shape, dt)
+        return {
+            "emb": _dense_init(kg(), (self.v_pad, cfg.d_model), dt),
+            "lm_head": _dense_init(kg(), (self.v_pad, cfg.d_model), dt),
+            "final_norm": _norm_init(kg(), (cfg.d_model,), dt),
+            "blocks": out,
+        }
+
+    def kv_duplication(self):
+        return {}
+
+    def _top_shapes(self):
+        return {"emb": (self.v_pad, self.cfg.d_model),
+                "lm_head": (self.v_pad, self.cfg.d_model)}
+
+    def full_param_specs(self):
+        sp = self.param_specs()
+        sp["blocks"] = self._merge_fsdp_specs(
+            sp["blocks"], self.block_plan(), self._block_shapes(), offset=1)
+        top = self._merge_fsdp_specs(
+            {"emb": sp["emb"], "lm_head": sp["lm_head"]}, self.top_plan(),
+            self._top_shapes(), offset=0)
+        sp.update(top)
+        return sp
+
+    def _trunk(self, params, h, *, mode, caches=None):
+        cfg, mi = self.cfg, self.mi
+        plan = self.block_plan()
+
+        def body(carry, xs):
+            h = carry
+            if caches is not None:
+                p_l, cache_l = xs
+                cache_l = L.SSMCache(**cache_l)
+            else:
+                p_l, cache_l = xs, None
+            p_l = L.gather_fsdp(p_l, plan, mi)
+            y, new_cache = L.mamba2_layer(
+                p_l, L.rms_norm(h, p_l["ln"], cfg.norm_eps), mi, cfg,
+                mode=mode, cache=cache_l)
+            out = ({"state": new_cache.state, "conv_x": new_cache.conv_x,
+                    "conv_B": new_cache.conv_B, "conv_C": new_cache.conv_C}
+                   if new_cache is not None else None)
+            return h + y, out
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = (params["blocks"], caches) if caches is not None \
+            else params["blocks"]
+        h, new_caches = lax.scan(body, h, xs, unroll=cfg.scan_unroll or 1)
+        return L.rms_norm(h, params["final_norm"], cfg.norm_eps), new_caches
+
+    def _head(self, params, h):
+        return L.gather_fsdp({"lm_head": params["lm_head"]},
+                             {"lm_head": self.top_plan()["lm_head"]},
+                             self.mi)["lm_head"]
+
+    def loss(self, params, batch):
+        cfg, mi = self.cfg, self.mi
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        h = L.embed_lookup(emb, batch["tokens"], mi)
+        h, _ = self._trunk(params, h, mode="train")
+        loss, n = L.lm_head_loss(h, self._head(params, h), batch["labels"],
+                                 mi, vocab_real=cfg.vocab)
+        return loss, {"ce": loss, "tokens": n}
+
+    def prefill(self, params, batch):
+        cfg, mi = self.cfg, self.mi
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        h = L.embed_lookup(emb, batch["tokens"], mi)
+        h, caches = self._trunk(params, h, mode="prefill")
+        logits = L.lm_head_logits(h[:, -1:], self._head(params, h), mi,
+                                  vocab_real=cfg.vocab)
+        return logits[:, 0], caches
+
+    def decode(self, params, batch, caches):
+        cfg, mi = self.cfg, self.mi
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        h = L.embed_lookup(emb, batch["token"], mi)
+        h, new_caches = self._trunk(params, h, mode="decode", caches=caches)
+        logits = L.lm_head_logits(h, self._head(params, h), mi,
+                                  vocab_real=cfg.vocab)
+        return logits[:, 0], new_caches
+
+    def init_cache(self, B: int, s_max: int):
+        cfg = self.cfg
+        dt = _dt(cfg)
+        Lr = cfg.n_layers
+        H, N, P_, di = (cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim,
+                        cfg.d_inner)
+        k1 = cfg.ssm_conv - 1
+        return {
+            "state": jnp.zeros((Lr, B, H, N, P_), jnp.float32),
+            "conv_x": jnp.zeros((Lr, B, k1, di), dt),
+            "conv_B": jnp.zeros((Lr, B, k1, N), dt),
+            "conv_C": jnp.zeros((Lr, B, k1, N), dt),
+        }
+
+    def cache_specs(self, batch_axes):
+        return {
+            "state": P(None, batch_axes, "model", None, None),
+            "conv_x": P(None, batch_axes, None, "model"),
+            "conv_B": P(None, batch_axes, None, None),
+            "conv_C": P(None, batch_axes, None, None),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): Mamba2 stack + one shared attention block every k layers
+# ---------------------------------------------------------------------------
+
+class HybridLM(SSMLM):
+    def __init__(self, cfg: ModelConfig, mi: MeshInfo):
+        super().__init__(cfg, mi)
+        if cfg.n_layers % cfg.hybrid_period:
+            raise ValueError("n_layers must divide by hybrid_period")
+        self.n_seg = cfg.n_layers // cfg.hybrid_period
+        self.lay = head_layout(cfg, self.tp)
+
+    def _shared_shapes(self):
+        cfg = self.cfg
+        d, f = cfg.d_model, cfg.d_ff
+        sh = dict(attn_param_shapes(cfg, self.lay, 1))
+        sh = {k: v[1:] for k, v in sh.items()}  # unstacked
+        sh.update({"ln1": (d,), "ln2": (d,), "w_gate": (d, f),
+                   "w_up": (d, f), "w_down": (f, d)})
+        return sh
+
+    def _shared_specs(self):
+        sp = dict(attn_param_specs(self.cfg, stacked=False))
+        sp.update({"ln1": P(None), "ln2": P(None),
+                   "w_gate": P(None, "model"), "w_up": P(None, "model"),
+                   "w_down": P("model", None)})
+        return sp
+
+    def param_specs(self):
+        sp = super().param_specs()
+        sp["shared"] = self._shared_specs()
+        return sp
+
+    def shared_plan(self):
+        return self._plan(self._shared_shapes(), self._shared_specs(),
+                          stacked=False)
+
+    def full_param_specs(self):
+        sp = super().full_param_specs()
+        sp["shared"] = self._merge_fsdp_specs(
+            sp["shared"], self.shared_plan(), self._shared_shapes(),
+            offset=0)
+        return sp
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        p = super().init(k1)
+        cfg = self.cfg
+        kg = _KeyGen(k2)
+        dt = _dt(cfg)
+        d, f = cfg.d_model, cfg.d_ff
+        shared = {k: v[0] for k, v in init_attn_params(
+            kg, cfg, self.lay, 1, 0.02 / (2 * self.n_seg) ** 0.5).items()}
+        shared["ln1"] = _norm_init(kg(), (d,), dt)
+        shared["ln2"] = _norm_init(kg(), (d,), dt)
+        shared["w_gate"] = _dense_init(kg(), (d, f), dt)
+        shared["w_up"] = _dense_init(kg(), (d, f), dt)
+        shared["w_down"] = _dense_init(kg(), (f, d), dt,
+                                       0.02 / (2 * self.n_seg) ** 0.5)
+        p["shared"] = shared
+        return p
+
+    def kv_duplication(self):
+        return {f"shared/{k}": v
+                for k, v in kv_duplication(self.cfg, self.lay).items()}
+
+    def _shared_block(self, params, h, *, mode, positions, cache):
+        cfg, mi = self.cfg, self.mi
+        p = L.gather_fsdp(params["shared"], self.shared_plan(), mi)
+        a, new_cache = L.attn_layer(
+            p, L.rms_norm(h, p["ln1"], cfg.norm_eps), mi, self.lay, cfg,
+            mode=mode, mask_mode="causal", positions=positions, cache=cache)
+        h = h + a
+        h = h + L.mlp_glu(p, L.rms_norm(h, p["ln2"], cfg.norm_eps), mi)
+        return h, new_cache
+
+    def _trunk(self, params, h, *, mode, caches=None, positions=None):
+        cfg, mi = self.cfg, self.mi
+        plan = self.block_plan()
+        per = cfg.hybrid_period
+        n_seg = self.n_seg
+        if positions is None:
+            B, S = h.shape[0], h.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        # reshape stacked (L, ...) -> (n_seg, per, ...)
+        seg_params = jax.tree.map(
+            lambda a: a.reshape((n_seg, per) + a.shape[1:]), params["blocks"])
+
+        def mamba_body(carry, xs):
+            h = carry
+            if caches is not None:
+                p_l, cache_l = xs
+                cache_l = L.SSMCache(**cache_l)
+            else:
+                p_l, cache_l = xs, None
+            p_l = L.gather_fsdp(p_l, plan, mi)
+            y, new_cache = L.mamba2_layer(
+                p_l, L.rms_norm(h, p_l["ln"], cfg.norm_eps), mi, cfg,
+                mode=mode, cache=cache_l)
+            out = ({"state": new_cache.state, "conv_x": new_cache.conv_x,
+                    "conv_B": new_cache.conv_B, "conv_C": new_cache.conv_C}
+                   if new_cache is not None else None)
+            return h + y, out
+
+        if cfg.remat:
+            mamba_body = jax.checkpoint(mamba_body)
+
+        def seg_body(carry, xs):
+            h = carry
+            if caches is not None:
+                p_seg, ssm_seg, attn_seg = xs
+                h, new_ssm = lax.scan(mamba_body, h, (p_seg, ssm_seg),
+                                      unroll=cfg.scan_unroll or 1)
+                h, new_attn = self._shared_block(
+                    params, h, mode=mode, positions=positions,
+                    cache=L.AttnCache(**attn_seg))
+                return h, (new_ssm, {"k": new_attn.k, "v": new_attn.v,
+                                     "pos": new_attn.pos})
+            h, new_ssm = lax.scan(mamba_body, h, xs,
+                                  unroll=cfg.scan_unroll or 1)
+            h, new_attn = self._shared_block(
+                params, h, mode=mode, positions=positions, cache=None)
+            out = ((new_ssm, {"k": new_attn.k, "v": new_attn.v,
+                              "pos": new_attn.pos})
+                   if new_attn is not None else new_ssm)
+            return h, out
+
+        if caches is not None:
+            ssm_c, attn_c = caches["ssm"], caches["attn"]
+            ssm_c = jax.tree.map(
+                lambda a: a.reshape((n_seg, per) + a.shape[1:]), ssm_c)
+            h, (new_ssm, new_attn) = lax.scan(
+                seg_body, h, (seg_params, ssm_c, attn_c),
+                unroll=cfg.scan_unroll or 1)
+            new_ssm = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_ssm)
+            new_caches = {"ssm": new_ssm, "attn": new_attn}
+        else:
+            h, out = lax.scan(seg_body, h, seg_params,
+                              unroll=cfg.scan_unroll or 1)
+            if mode == "prefill":
+                new_ssm, new_attn = out
+                new_ssm = jax.tree.map(
+                    lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]),
+                    new_ssm)
+                new_caches = {"ssm": new_ssm, "attn": new_attn}
+            else:
+                new_caches = None
+        return L.rms_norm(h, params["final_norm"], cfg.norm_eps), new_caches
+
+    def prefill(self, params, batch):
+        cfg, mi = self.cfg, self.mi
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        h = L.embed_lookup(emb, batch["tokens"], mi)
+        h, caches = self._trunk(params, h, mode="prefill")
+        logits = L.lm_head_logits(h[:, -1:], self._head(params, h), mi,
+                                  vocab_real=cfg.vocab)
+        return logits[:, 0], caches
+
+    def decode(self, params, batch, caches):
+        cfg, mi = self.cfg, self.mi
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        h = L.embed_lookup(emb, batch["token"], mi)
+        pos = batch["pos"][:, None]
+        h, new_caches = self._trunk(params, h, mode="decode", caches=caches,
+                                    positions=pos)
+        logits = L.lm_head_logits(h, self._head(params, h), mi,
+                                  vocab_real=cfg.vocab)
+        return logits[:, 0], new_caches
+
+    def init_cache(self, B: int, s_max: int):
+        cfg, lay = self.cfg, self.lay
+        dt = _dt(cfg)
+        ssm = super().init_cache(B, s_max)
+        attn = {
+            "k": jnp.zeros((self.n_seg, B, s_max, lay.kv_total, cfg.hd), dt),
+            "v": jnp.zeros((self.n_seg, B, s_max, lay.kv_total, cfg.hd), dt),
+            "pos": jnp.zeros((self.n_seg, B), jnp.int32),
+        }
+        return {"ssm": ssm, "attn": attn}
+
+    def cache_specs(self, batch_axes):
+        return {
+            "ssm": super().cache_specs(batch_axes),
+            "attn": {
+                "k": P(None, batch_axes, None, "model", None),
+                "v": P(None, batch_axes, None, "model", None),
+                "pos": P(None, batch_axes),
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+class EncDecLM(BaseModel):
+    """Whisper-style: stub conv frontend (precomputed frame embeddings in),
+    bidirectional encoder, causal decoder with cross-attention."""
+
+    def __init__(self, cfg: ModelConfig, mi: MeshInfo):
+        super().__init__(cfg, mi)
+        self.lay = head_layout(cfg, self.tp)
+
+    def _enc_shapes(self):
+        cfg, Lr = self.cfg, self.cfg.enc_layers
+        d, f = cfg.d_model, cfg.d_ff
+        sh = dict(attn_param_shapes(cfg, self.lay, Lr))
+        sh.update({"ln1": (Lr, d), "ln2": (Lr, d),
+                   "w_fc1": (Lr, d, f), "b_fc1": (Lr, f),
+                   "w_fc2": (Lr, f, d), "b_fc2": (Lr, d)})
+        return sh
+
+    def _dec_shapes(self):
+        cfg, Lr = self.cfg, self.cfg.n_layers
+        d, f = cfg.d_model, cfg.d_ff
+        sh = dict(attn_param_shapes(cfg, self.lay, Lr))
+        xs = {f"x_{k}": v for k, v in
+              attn_param_shapes(cfg, self.lay, Lr).items()}
+        sh.update(xs)
+        sh.update({"ln1": (Lr, d), "ln_x": (Lr, d), "ln2": (Lr, d),
+                   "w_fc1": (Lr, d, f), "b_fc1": (Lr, f),
+                   "w_fc2": (Lr, f, d), "b_fc2": (Lr, d)})
+        return sh
+
+    def _mlp_specs(self):
+        return {"w_fc1": P(None, None, "model"), "b_fc1": P(None, "model"),
+                "w_fc2": P(None, "model", None), "b_fc2": P(None, None)}
+
+    def _enc_specs(self):
+        sp = dict(attn_param_specs(self.cfg))
+        sp.update({"ln1": P(None, None), "ln2": P(None, None)})
+        sp.update(self._mlp_specs())
+        return sp
+
+    def _dec_specs(self):
+        sp = dict(attn_param_specs(self.cfg))
+        sp.update({f"x_{k}": v
+                   for k, v in attn_param_specs(self.cfg).items()})
+        sp.update({"ln1": P(None, None), "ln_x": P(None, None),
+                   "ln2": P(None, None)})
+        sp.update(self._mlp_specs())
+        return sp
+
+    def param_specs(self):
+        return {
+            "emb": P("model", None), "lm_head": P("model", None),
+            "enc_norm": P(None), "final_norm": P(None),
+            "enc": self._enc_specs(), "dec": self._dec_specs(),
+        }
+
+    def enc_plan(self):
+        return self._plan(self._enc_shapes(), self._enc_specs(), stacked=True)
+
+    def dec_plan(self):
+        return self._plan(self._dec_shapes(), self._dec_specs(), stacked=True)
+
+    def top_plan(self):
+        shapes = {"emb": (self.v_pad, self.cfg.d_model),
+                  "lm_head": (self.v_pad, self.cfg.d_model)}
+        specs = {"emb": P("model", None), "lm_head": P("model", None)}
+        return self._plan(shapes, specs, stacked=False)
+
+    def full_param_specs(self):
+        sp = self.param_specs()
+        sp["enc"] = self._merge_fsdp_specs(
+            sp["enc"], self.enc_plan(), self._enc_shapes(), offset=1)
+        sp["dec"] = self._merge_fsdp_specs(
+            sp["dec"], self.dec_plan(), self._dec_shapes(), offset=1)
+        top_shapes = {"emb": (self.v_pad, self.cfg.d_model),
+                      "lm_head": (self.v_pad, self.cfg.d_model)}
+        top = self._merge_fsdp_specs(
+            {"emb": sp["emb"], "lm_head": sp["lm_head"]}, self.top_plan(),
+            top_shapes, offset=0)
+        sp.update(top)
+        return sp
+
+    def init(self, key):
+        cfg = self.cfg
+        kg = _KeyGen(key)
+        dt = _dt(cfg)
+        d, f = cfg.d_model, cfg.d_ff
+
+        def mlp(Lr, scale):
+            return {"w_fc1": _dense_init(kg(), (Lr, d, f), dt),
+                    "b_fc1": jnp.zeros((Lr, f), dt),
+                    "w_fc2": _dense_init(kg(), (Lr, f, d), dt, scale),
+                    "b_fc2": jnp.zeros((Lr, d), dt)}
+
+        es = 0.02 / (2 * cfg.enc_layers) ** 0.5
+        ds = 0.02 / (2 * cfg.n_layers) ** 0.5
+        enc = init_attn_params(kg, cfg, self.lay, cfg.enc_layers, es)
+        enc.update({"ln1": _norm_init(kg(), (cfg.enc_layers, d), dt),
+                    "ln2": _norm_init(kg(), (cfg.enc_layers, d), dt)})
+        enc.update(mlp(cfg.enc_layers, es))
+        dec = init_attn_params(kg, cfg, self.lay, cfg.n_layers, ds)
+        dec.update({f"x_{k}": v for k, v in init_attn_params(
+            kg, cfg, self.lay, cfg.n_layers, ds).items()})
+        dec.update({"ln1": _norm_init(kg(), (cfg.n_layers, d), dt),
+                    "ln_x": _norm_init(kg(), (cfg.n_layers, d), dt),
+                    "ln2": _norm_init(kg(), (cfg.n_layers, d), dt)})
+        dec.update(mlp(cfg.n_layers, ds))
+        return {
+            "emb": _dense_init(kg(), (self.v_pad, d), dt),
+            "lm_head": _dense_init(kg(), (self.v_pad, d), dt),
+            "enc_norm": _norm_init(kg(), (d,), dt),
+            "final_norm": _norm_init(kg(), (d,), dt),
+            "enc": enc, "dec": dec,
+        }
+
+    def kv_duplication(self):
+        dup = kv_duplication(self.cfg, self.lay)
+        out = {}
+        for k, v in dup.items():
+            out[f"enc/{k}"] = v
+            out[f"dec/{k}"] = v
+            out[f"dec/x_{k}"] = v
+        return out
+
+    def _encode(self, params, frames):
+        cfg, mi = self.cfg, self.mi
+        B, S, d = frames.shape
+        h = frames.astype(_dt(cfg)) + L.sinusoid_pos_emb(S, d, _dt(cfg))
+        plan = self.enc_plan()
+
+        def body(h, p_l):
+            p_l = L.gather_fsdp(p_l, plan, mi)
+            a, _ = L.attn_layer(
+                p_l, L.rms_norm(h, p_l["ln1"], cfg.norm_eps), mi, self.lay,
+                cfg, mode="train", mask_mode="full", use_rope=False)
+            h = h + a
+            h = h + L.mlp_plain(p_l, L.rms_norm(h, p_l["ln2"], cfg.norm_eps),
+                                mi)
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = lax.scan(body, h, params["enc"], unroll=cfg.scan_unroll or 1)
+        return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    def _cross_kv(self, p_l, enc_out):
+        """Per-layer cross KV from encoder output."""
+        B, S, _ = enc_out.shape
+        hd = self.cfg.hd
+        k = (enc_out @ p_l["x_wk"]).reshape(B, S, self.lay.kv_local, hd)
+        v = (enc_out @ p_l["x_wv"]).reshape(B, S, self.lay.kv_local, hd)
+        if self.cfg.qkv_bias:
+            k = k + p_l["x_bk"].reshape(1, 1, self.lay.kv_local, hd)
+            v = v + p_l["x_bv"].reshape(1, 1, self.lay.kv_local, hd)
+        return k, v
+
+    def _dec_block(self, p_l, h, enc_out, *, mode, cache, cross_kv,
+                   positions):
+        cfg, mi = self.cfg, self.mi
+        a, new_cache = L.attn_layer(
+            p_l, L.rms_norm(h, p_l["ln1"], cfg.norm_eps), mi, self.lay, cfg,
+            mode=mode, mask_mode="causal", positions=positions, cache=cache,
+            use_rope=False)
+        h = h + a
+        if cross_kv is None:
+            cross_kv = self._cross_kv(p_l, enc_out)
+        xp = {k[2:]: v for k, v in p_l.items() if k.startswith("x_")}
+        xa, _ = L.attn_layer(
+            xp, L.rms_norm(h, p_l["ln_x"], cfg.norm_eps), mi, self.lay, cfg,
+            mode="train", mask_mode="full", use_rope=False,
+            kv_override=cross_kv)
+        h = h + xa
+        h = h + L.mlp_plain(p_l, L.rms_norm(h, p_l["ln2"], cfg.norm_eps), mi)
+        return h, new_cache, cross_kv
+
+    def _decode_trunk(self, params, tokens_h, enc_out, *, mode, caches,
+                      positions):
+        cfg, mi = self.cfg, self.mi
+        plan = self.dec_plan()
+
+        def body(h, xs):
+            if caches is not None:
+                p_l, c_l = xs
+                cache_l = L.AttnCache(k=c_l["k"], v=c_l["v"], pos=c_l["pos"])
+                cross = (c_l["xk"], c_l["xv"])
+            else:
+                p_l, cache_l, cross = xs, None, None
+            p_l = L.gather_fsdp(p_l, plan, mi)
+            h, new_cache, cross = self._dec_block(
+                p_l, h, enc_out, mode=mode, cache=cache_l, cross_kv=cross,
+                positions=positions)
+            out = None
+            if new_cache is not None:
+                out = {"k": new_cache.k, "v": new_cache.v,
+                       "pos": new_cache.pos, "xk": cross[0], "xv": cross[1]}
+            return h, out
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = (params["dec"], caches) if caches is not None else params["dec"]
+        h, new_caches = lax.scan(body, tokens_h, xs,
+                                 unroll=cfg.scan_unroll or 1)
+        return L.rms_norm(h, params["final_norm"], cfg.norm_eps), new_caches
+
+    def loss(self, params, batch):
+        cfg, mi = self.cfg, self.mi
+        enc_out = self._encode(params, batch["frames"])
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        B, S = batch["tokens"].shape
+        h = L.embed_lookup(emb, batch["tokens"], mi)
+        h = h + L.sinusoid_pos_emb(S, cfg.d_model, h.dtype)
+        h, _ = self._decode_trunk(params, h, enc_out, mode="train",
+                                  caches=None, positions=None)
+        head = L.gather_fsdp({"lm_head": params["lm_head"]},
+                             {"lm_head": self.top_plan()["lm_head"]},
+                             mi)["lm_head"]
+        loss, n = L.lm_head_loss(h, head, batch["labels"], mi,
+                                 vocab_real=cfg.vocab)
+        return loss, {"ce": loss, "tokens": n}
+
+    def prefill(self, params, batch):
+        cfg, mi = self.cfg, self.mi
+        enc_out = self._encode(params, batch["frames"])
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        B, S = batch["tokens"].shape
+        h = L.embed_lookup(emb, batch["tokens"], mi)
+        h = h + L.sinusoid_pos_emb(S, cfg.d_model, h.dtype)
+        h, caches = self._decode_trunk(params, h, enc_out, mode="prefill",
+                                       caches=None, positions=None)
+        head = L.gather_fsdp({"lm_head": params["lm_head"]},
+                             {"lm_head": self.top_plan()["lm_head"]},
+                             mi)["lm_head"]
+        logits = L.lm_head_logits(h[:, -1:], head, mi, vocab_real=cfg.vocab)
+        return logits[:, 0], caches
+
+    def decode(self, params, batch, caches):
+        cfg, mi = self.cfg, self.mi
+        emb = L.gather_fsdp({"emb": params["emb"]},
+                            {"emb": self.top_plan()["emb"]}, mi)["emb"]
+        h = L.embed_lookup(emb, batch["token"], mi)
+        B = h.shape[0]
+        pos_emb = L.sinusoid_pos_emb(int(caches["k"].shape[2]),
+                                     cfg.d_model, h.dtype)
+        h = h + jnp.take(pos_emb, batch["pos"], axis=0)[:, None]
+        h, new_caches = self._decode_trunk(
+            params, h, None, mode="decode", caches=caches,
+            positions=batch["pos"][:, None])
+        head = L.gather_fsdp({"lm_head": params["lm_head"]},
+                             {"lm_head": self.top_plan()["lm_head"]},
+                             mi)["lm_head"]
+        logits = L.lm_head_logits(h, head, mi, vocab_real=cfg.vocab)
+        return logits[:, 0], new_caches
+
+    def init_cache(self, B: int, s_max: int):
+        cfg, lay = self.cfg, self.lay
+        dt = _dt(cfg)
+        Lr = cfg.n_layers
+        S_enc = cfg.enc_seq
+        return {
+            "k": jnp.zeros((Lr, B, s_max, lay.kv_total, cfg.hd), dt),
+            "v": jnp.zeros((Lr, B, s_max, lay.kv_total, cfg.hd), dt),
+            "pos": jnp.zeros((Lr, B), jnp.int32),
+            "xk": jnp.zeros((Lr, B, S_enc, lay.kv_total, cfg.hd), dt),
+            "xv": jnp.zeros((Lr, B, S_enc, lay.kv_total, cfg.hd), dt),
+        }
+
+    def cache_specs(self, batch_axes):
+        kv = P(None, batch_axes, None, "model", None)
+        return {"k": kv, "v": kv, "pos": P(None, batch_axes),
+                "xk": kv, "xv": kv}
+
+
+def build_model(cfg: ModelConfig, mi: MeshInfo) -> BaseModel:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, mi)
+    if cfg.family == "ssm":
+        return SSMLM(cfg, mi)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, mi)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, mi)
+    raise ValueError(cfg.family)

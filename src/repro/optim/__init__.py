@@ -1,0 +1,9 @@
+from repro.optim.adamw import (AdamW, AdamWState, apply_updates,
+                               global_norm, sync_duplicated_grads)
+from repro.optim.compress import (compressed_psum, dequantize_int8,
+                                  init_error_state, quantize_int8)
+from repro.optim.lp_clip import lp_constrain_updates
+
+__all__ = ["AdamW", "AdamWState", "apply_updates", "global_norm",
+           "sync_duplicated_grads", "compressed_psum", "dequantize_int8",
+           "init_error_state", "quantize_int8", "lp_constrain_updates"]

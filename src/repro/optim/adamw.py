@@ -1,0 +1,126 @@
+"""AdamW with framework integrations.
+
+* Optimizer state (m, v, fp32 master copy optional) inherits each
+  parameter's sharding, so with FSDP-sharded params the state is ZeRO-
+  sharded automatically — the update is purely local and elementwise.
+* ``sync_duplicated_grads`` averages gradients across the KV-head copies
+  that TP replication introduced (models.transformer.init_attn_params tiles
+  them identically at init; averaging keeps them identical forever, which
+  keeps the padded layout exactly equal to the real GQA architecture).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        new_m = jax.tree.map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state.m, grads)
+        new_v = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+            state.v, grads)
+
+        def upd(p, m, v):
+            mh = m / b1c
+            vh = v / b2c
+            u = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-self.lr * u).astype(jnp.float32)
+
+        updates = jax.tree.map(upd, params, new_m, new_v)
+        return updates, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Duplicated-KV gradient averaging
+# ---------------------------------------------------------------------------
+
+def sync_duplicated_grads(grads, dup_map: Dict[str, int], hd: int):
+    """dup_map: slash-path -> replication factor.  The duplicated axis is
+    always the trailing (kv_total*hd) weight column / bias axis laid out
+    head-major, so averaging is reshape (..., n_kv, rep, hd) -> mean."""
+    if not dup_map:
+        return grads
+    flat = _flatten_with_paths(grads)
+    for path, rep in dup_map.items():
+        if path not in flat:
+            continue
+        g = flat[path]
+        last = g.shape[-1]
+        n_kv = last // (rep * hd)
+        gr = g.reshape(g.shape[:-1] + (n_kv, rep, hd))
+        gr = jnp.broadcast_to(gr.mean(axis=-2, keepdims=True), gr.shape)
+        flat[path] = gr.reshape(g.shape)
+    return _unflatten_with_paths(flat, grads)
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    out = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else k, v)
+        else:
+            out[prefix] = node
+
+    rec("", tree)
+    return out
+
+
+def _unflatten_with_paths(flat: Dict[str, Any], like):
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else k, v)
+                    for k, v in node.items()}
+        return flat[prefix]
+
+    return rec("", like)

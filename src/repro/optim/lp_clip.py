@@ -1,0 +1,97 @@
+"""LP-constrained update scaling: the paper's batch 2-D LP solver as a
+first-class training feature.
+
+For every parameter block we pose a tiny 2-D linear program over
+(s1 = proposed-update scale, s2 = momentum-correction scale):
+
+    maximize    s1 + lambda * s2
+    subject to  s1 * ||u||    <= delta * (||p|| + eps)   (trust region)
+                s1 * <u, g> + s2 * <mu, g> <= 0          (descent guard)
+                0 <= s1 <= 1,   -1 <= s2 <= 1            (box)
+
+where u is the optimizer's proposed update, g the gradient and mu the unit
+momentum direction.  One LP per parameter block -> a *batch* of LPs with
+identical structure but different coefficients — exactly the workload
+shape the paper accelerates — solved on-device with core.solve_batch_lp
+(or the Pallas kernel on TPU).
+
+This is deliberately lightweight (a handful of constraints per LP); its
+purpose is to exercise the paper's solver inside the training loop and to
+give a principled per-block trust region, not to be a new optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lp import make_batch
+from repro.core.seidel import solve_batch_lp
+
+_EPS = 1e-12
+
+
+def _block_stats(u, g, m):
+    u32 = u.astype(jnp.float32).ravel()
+    g32 = g.astype(jnp.float32).ravel()
+    m32 = m.astype(jnp.float32).ravel()
+    un = jnp.linalg.norm(u32)
+    mn = jnp.linalg.norm(m32)
+    mu = m32 / (mn + _EPS)
+    return un, jnp.dot(u32, g32), jnp.dot(mu, g32)
+
+
+def lp_constrain_updates(
+    updates, grads, momenta, params,
+    *,
+    delta: float = 0.05,
+    lam: float = 0.1,
+    method: str = "rgb",
+) -> Tuple[Any, jax.Array]:
+    """Scale each update leaf by the LP-optimal (s1, s2).
+
+    Returns (new_updates, mean_s1) — mean_s1 is a health metric: 1.0 means
+    the trust region never binds.
+    """
+    leaves_u, tdef = jax.tree.flatten(updates)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_m = jax.tree.leaves(momenta)
+    leaves_p = jax.tree.leaves(params)
+    nb = len(leaves_u)
+
+    rows = []
+    for u, g, m, p in zip(leaves_u, leaves_g, leaves_m, leaves_p):
+        un, ug, mg = _block_stats(u, g, m)
+        pn = jnp.linalg.norm(p.astype(jnp.float32).ravel())
+        # the s2 momentum correction is scaled to 10% of the update norm
+        mg_s = 0.1 * un * mg
+        # constraints (A s <= b), s = (s1, s2)
+        A = jnp.stack([
+            jnp.stack([un, jnp.zeros(())]),           # s1*||u|| <= d*||p||
+            jnp.stack([ug, mg_s]),                    # descent guard <= 0
+            jnp.stack([jnp.ones(()), jnp.zeros(())]),   # s1 <= 1
+            jnp.stack([-jnp.ones(()), jnp.zeros(())]),  # -s1 <= 0
+            jnp.stack([jnp.zeros(()), jnp.ones(())]),   # s2 <= 1
+            jnp.stack([jnp.zeros(()), -jnp.ones(())]),  # -s2 <= 1
+        ])
+        b = jnp.stack([delta * (pn + 1e-3), jnp.zeros(()), jnp.ones(()),
+                       jnp.zeros(()), jnp.ones(()), jnp.ones(())])
+        rows.append((A, b))
+
+    A = jnp.stack([r[0] for r in rows])  # (nb, 6, 2)
+    b = jnp.stack([r[1] for r in rows])  # (nb, 6)
+    c = jnp.broadcast_to(jnp.asarray([1.0, lam], jnp.float32), (nb, 2))
+    sol = solve_batch_lp(make_batch(A, b, c), method=method, M=10.0)
+    s1 = jnp.where(sol.feasible, sol.x[:, 0], 1.0)
+    s2 = jnp.where(sol.feasible, sol.x[:, 1], 0.0)
+
+    new_leaves = []
+    for i, (u, m) in enumerate(zip(leaves_u, leaves_m)):
+        u32 = u.astype(jnp.float32)
+        mn = jnp.linalg.norm(m.astype(jnp.float32).ravel()) + _EPS
+        un = jnp.linalg.norm(u32.ravel())
+        nu = (s1[i] * u32
+              + 0.1 * un * s2[i] * m.astype(jnp.float32) / mn)
+        new_leaves.append(nu.astype(u.dtype))
+    return jax.tree.unflatten(tdef, new_leaves), jnp.mean(s1)

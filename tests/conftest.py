@@ -1,0 +1,32 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def run_multidevice(code: str, n_devices: int = 4, timeout: int = 600):
+    """Run a python snippet in a subprocess with N forced host devices.
+
+    Tests themselves must see exactly one device (per the project brief),
+    so anything needing a real mesh runs out-of-process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"multidevice snippet failed:\nSTDOUT:\n{r.stdout}\n"
+            f"STDERR:\n{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    return run_multidevice

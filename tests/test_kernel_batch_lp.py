@@ -1,0 +1,83 @@
+"""Pallas RGB kernel validation: shape/dtype sweeps in interpret mode
+against the pure-jnp oracle (kernels.ref) and scipy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (infeasible_lp, normalize_batch, ragged_feasible_lp,
+                        random_feasible_lp, shuffle_batch, solve_batch_lp)
+from repro.kernels import ops, ref
+from repro.kernels.batch_lp import _pick_tile
+
+
+@pytest.mark.parametrize("batch,m", [
+    (8, 5), (64, 37), (100, 200), (3, 1), (128, 128), (17, 513),
+])
+def test_kernel_matches_ref(batch, m):
+    lp = random_feasible_lp(jax.random.key(batch + m), batch, m)
+    nb = shuffle_batch(jax.random.key(1), normalize_batch(lp))
+    r = solve_batch_lp(nb, method="rgb", normalize=False)
+    k = solve_batch_lp(nb, method="kernel", normalize=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(r.feasible),
+                                  np.asarray(k.feasible))
+    np.testing.assert_allclose(np.asarray(r.x), np.asarray(k.x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_packed_interface_matches_ref():
+    lp = normalize_batch(random_feasible_lp(jax.random.key(0), 32, 50))
+    L, c, mv = ops.pack_constraints(lp)
+    x_ref, feas_ref = ref.solve_packed_ref(L, c, mv)
+    sol = ops.solve_batch_lp_kernel(lp, interpret=True)
+    np.testing.assert_allclose(np.asarray(sol.x), np.asarray(x_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(sol.feasible).astype(np.int32), np.asarray(feas_ref))
+
+
+def test_kernel_infeasible():
+    lp = normalize_batch(infeasible_lp(16, 20))
+    sol = solve_batch_lp(lp, method="kernel", normalize=False,
+                         interpret=True)
+    assert not bool(jnp.any(sol.feasible))
+
+
+def test_kernel_ragged():
+    lp = shuffle_batch(jax.random.key(7), normalize_batch(
+        ragged_feasible_lp(jax.random.key(6), 40, 70)))
+    r = solve_batch_lp(lp, method="rgb", normalize=False)
+    k = solve_batch_lp(lp, method="kernel", normalize=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(r.x), np.asarray(k.x),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tile", [8, 32, 128])
+def test_kernel_tile_sizes(tile):
+    lp = normalize_batch(random_feasible_lp(jax.random.key(2), 48, 30))
+    base = ops.solve_batch_lp_kernel(lp, interpret=True)
+    t = ops.solve_batch_lp_kernel(lp, tile=tile, interpret=True)
+    np.testing.assert_allclose(np.asarray(base.x), np.asarray(t.x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pick_tile_vmem_budget():
+    # T * 4 * m_pad * 4B must stay within the default 8MB budget
+    for m_pad in (128, 1024, 8192, 65536):
+        t = _pick_tile(m_pad)
+        assert t >= 8 and t % 8 == 0
+        assert t * 4 * m_pad * 4 <= 8 * 1024 * 1024 or t == 8
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), m=st.integers(2, 90),
+       batch=st.integers(1, 40))
+def test_kernel_property_sweep(seed, m, batch):
+    lp = shuffle_batch(jax.random.key(seed + 1), normalize_batch(
+        random_feasible_lp(jax.random.key(seed), batch, m)))
+    r = solve_batch_lp(lp, method="rgb", normalize=False)
+    k = solve_batch_lp(lp, method="kernel", normalize=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(r.objective),
+                               np.asarray(k.objective),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,188 @@
+"""Unit tests for model layers: attention equivalences, SSD scan vs
+sequential recurrence, MoE routing invariants, RoPE, losses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models.common import MeshInfo, ModelConfig
+
+MI1 = MeshInfo(model_size=1, data_size=1)
+
+
+def test_flash_equals_dense_all_masks():
+    q = jax.random.normal(jax.random.key(1), (2, 128, 2, 3, 16))
+    k = jax.random.normal(jax.random.key(2), (2, 128, 2, 16))
+    v = jax.random.normal(jax.random.key(3), (2, 128, 2, 16))
+    for mm in ("causal", "full", "prefix"):
+        a = L.dense_attention(q, k, v, mask_mode=mm, prefix=5)
+        b = L.flash_attention(q, k, v, mask_mode=mm, prefix=5,
+                              chunk_q=32, chunk_k=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_equals_dense_last_row():
+    """Decoding position t must equal row t of dense causal attention."""
+    B, S, G, Qg, D = 2, 24, 1, 2, 8
+    q = jax.random.normal(jax.random.key(1), (B, S, G, Qg, D))
+    k = jax.random.normal(jax.random.key(2), (B, S, G, D))
+    v = jax.random.normal(jax.random.key(3), (B, S, G, D))
+    dense = L.dense_attention(q, k, v, mask_mode="causal")
+    t = S - 1
+    out = L.decode_attention(q[:, t:t + 1], k, v,
+                             jnp.full((B,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(dense[:, t]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunked_matches_sequential():
+    """The chunked SSD algorithm == the naive per-token recurrence."""
+    B, S, H, P, N = 2, 64, 3, 8, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    xs = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+
+    for chunk in (8, 16, 64):
+        y, state = L.ssd_chunked(xs, dt, A, Bc, Cc, chunk)
+        # sequential oracle
+        st_ref = jnp.zeros((B, H, N, P))
+        ys = []
+        for t in range(S):
+            st_ref, yt = L.ssd_decode_step(
+                st_ref, xs[:, t], dt[:, t], A, Bc[:, t], Cc[:, t])
+            ys.append(yt)
+        y_ref = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(state), np.asarray(st_ref),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_causal_conv_streaming_matches_batch():
+    B, S, C, K = 2, 16, 6, 4
+    x = jax.random.normal(jax.random.key(0), (B, S, C))
+    w = jax.random.normal(jax.random.key(1), (K, C))
+    y_full, _ = L._causal_conv(x, w)
+    cache = jnp.zeros((B, K - 1, C))
+    outs = []
+    for t in range(S):
+        yt, cache = L._causal_conv(x[:, t:t + 1], w, cache)
+        outs.append(yt)
+    y_stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_stream),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    B, S, H, D = 2, 32, 2, 16
+    x = jax.random.normal(jax.random.key(0), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = L.rope_tables(pos, D, 1e4, jnp.float32)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, D))
+    v = jax.random.normal(jax.random.key(2), (1, 1, 1, D))
+    def dot_at(p, k):
+        pos1 = jnp.full((1, 1), p)
+        pos2 = jnp.full((1, 1), p + k)
+        c1, s1 = L.rope_tables(pos1, D, 1e4, jnp.float32)
+        c2, s2 = L.rope_tables(pos2, D, 1e4, jnp.float32)
+        return float(jnp.sum(L.apply_rope(q, c1, s1) *
+                             L.apply_rope(v, c2, s2)))
+    assert abs(dot_at(3, 5) - dot_at(11, 5)) < 1e-4
+
+
+def _moe_cfg(E=8, k=2):
+    return ModelConfig(name="t", family="moe", n_layers=1, d_model=16,
+                       n_heads=2, n_kv=2, d_ff=32, vocab=64, n_experts=E,
+                       top_k=k)
+
+
+def test_moe_capacity_and_combination():
+    cfg = _moe_cfg()
+    ks = jax.random.split(jax.random.key(0), 5)
+    B, S, d, E, f = 2, 16, 16, 8, 32
+    p = {
+        "w_router": jax.random.normal(ks[0], (d, E)) * 0.1,
+        "w_gate": jax.random.normal(ks[1], (E, d, f)) * 0.1,
+        "w_up": jax.random.normal(ks[2], (E, d, f)) * 0.1,
+        "w_down": jax.random.normal(ks[3], (E, f, d)) * 0.1,
+    }
+    x = jax.random.normal(ks[4], (B, S, d))
+    y, aux = L.moe_layer(p, x, MI1, cfg, capacity_factor=8.0)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0.99  # balance loss >= 1 at optimum E*sum(f*p)
+
+    # oracle: dense per-token expert mixture with the same top-k weights
+    logits = x.reshape(-1, d) @ p["w_router"]
+    probs = jax.nn.softmax(logits, -1)
+    tv, ti = jax.lax.top_k(probs, cfg.top_k)
+    tv = tv / tv.sum(-1, keepdims=True)
+    xf = x.reshape(-1, d)
+    y_ref = jnp.zeros_like(xf)
+    for e in range(E):
+        h = L.silu(xf @ p["w_gate"][e]) * (xf @ p["w_up"][e])
+        o = h @ p["w_down"][e]
+        w = jnp.where(ti == e, tv, 0.0).sum(-1)
+        y_ref = y_ref + o * w[:, None]
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, d)),
+                               np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity factor ~0 every token drops -> output ~ 0."""
+    cfg = _moe_cfg()
+    p = {
+        "w_router": jnp.ones((16, 8)),
+        "w_gate": jnp.ones((8, 16, 32)),
+        "w_up": jnp.ones((8, 16, 32)),
+        "w_down": jnp.ones((8, 32, 16)),
+    }
+    x = jnp.ones((1, 64, 16))
+    y, _ = L.moe_layer(p, x, MI1, cfg, capacity_factor=1e-9)
+    # capacity C=1 -> at most top_k * E tokens receive any output
+    nonzero_tokens = int((jnp.abs(y.reshape(-1, 16)).sum(-1) > 0).sum())
+    assert nonzero_tokens <= cfg.top_k * cfg.n_experts, nonzero_tokens
+
+
+def test_ce_loss_matches_naive():
+    V, d, N = 50, 8, 12
+    ks = jax.random.split(jax.random.key(0), 3)
+    h = jax.random.normal(ks[0], (2, N // 2, d))
+    table = jax.random.normal(ks[1], (V, d)) * 0.5
+    labels = jax.random.randint(ks[2], (2, N // 2), 0, V - 10)
+    loss, n = L.lm_head_loss(h, table, labels, MI1, vocab_real=V - 8)
+    logits = np.asarray(h.reshape(-1, d) @ table.T, np.float64)
+    logits[:, V - 8:] = -np.inf
+    lse = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) \
+        + logits.max(-1)
+    lab = np.asarray(labels).reshape(-1)
+    ref = (lse - logits[np.arange(len(lab)), lab]).mean()
+    np.testing.assert_allclose(float(loss), ref, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_masked_labels_excluded(seed):
+    V, d = 32, 8
+    ks = jax.random.split(jax.random.key(seed), 3)
+    h = jax.random.normal(ks[0], (1, 8, d))
+    table = jax.random.normal(ks[1], (V, d))
+    labels = jax.random.randint(ks[2], (1, 8), 0, V)
+    masked = labels.at[0, :4].set(-1)
+    loss_m, n = L.lm_head_loss(h, table, masked, MI1, vocab_real=V)
+    loss_h, _ = L.lm_head_loss(h[:, 4:], table, labels[:, 4:], MI1,
+                               vocab_real=V)
+    assert int(n) == 4
+    np.testing.assert_allclose(float(loss_m), float(loss_h), rtol=1e-5)

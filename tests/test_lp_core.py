@@ -1,0 +1,165 @@
+"""Correctness of the batched Seidel solvers against scipy.linprog and
+against each other, plus property-based invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linprog
+
+from repro.core import (adversarial_lp, infeasible_lp, make_batch,
+                        normalize_batch, pad_batch, ragged_feasible_lp,
+                        random_feasible_lp, replicated_lp, shuffle_batch,
+                        solve_batch_lp, solve_naive, solve_rgb)
+
+M_BOX = 1.0e4
+RTOL = 3e-4
+
+
+def scipy_solve(A, b, c):
+    r = linprog(-np.asarray(c, np.float64),
+                A_ub=np.asarray(A, np.float64),
+                b_ub=np.asarray(b, np.float64),
+                bounds=[(-M_BOX, M_BOX)] * 2, method="highs")
+    return r  # status 0 = optimal, 2 = infeasible
+
+
+def assert_matches_scipy(batch, sol, rtol=RTOL):
+    A = np.asarray(batch.A)
+    b = np.asarray(batch.b)
+    c = np.asarray(batch.c)
+    mv = np.asarray(batch.m_valid)
+    for i in range(batch.batch):
+        r = scipy_solve(A[i][:mv[i]], b[i][:mv[i]], c[i])
+        if r.status == 2:
+            assert not bool(sol.feasible[i]), f"problem {i}: scipy says " \
+                f"infeasible, solver says feasible"
+        else:
+            assert r.status == 0, f"scipy status {r.status}"
+            assert bool(sol.feasible[i]), f"problem {i}: scipy optimal " \
+                f"{-r.fun}, solver says infeasible"
+            np.testing.assert_allclose(
+                float(sol.objective[i]), -r.fun, rtol=rtol, atol=rtol,
+                err_msg=f"problem {i}")
+
+
+@pytest.mark.parametrize("method", ["naive", "rgb"])
+@pytest.mark.parametrize("batch,m", [(32, 8), (16, 100), (5, 3)])
+def test_random_feasible_matches_scipy(method, batch, m):
+    lp = random_feasible_lp(jax.random.key(batch * m), batch, m)
+    sol = solve_batch_lp(lp, method=method, key=jax.random.key(1))
+    assert_matches_scipy(lp, sol)
+
+
+@pytest.mark.parametrize("method", ["naive", "rgb"])
+def test_infeasible_detection(method):
+    sol = solve_batch_lp(infeasible_lp(8, 12), method=method)
+    assert not bool(jnp.any(sol.feasible))
+
+
+def test_ragged_batch():
+    lp = ragged_feasible_lp(jax.random.key(3), 24, 60)
+    sol = solve_batch_lp(lp, method="rgb", key=jax.random.key(4))
+    assert_matches_scipy(lp, sol)
+
+
+def test_replicated_batch_identical_results():
+    lp = replicated_lp(jax.random.key(5), 16, 40)
+    sol = solve_batch_lp(lp, method="rgb")
+    x = np.asarray(sol.x)
+    np.testing.assert_allclose(x, np.broadcast_to(x[:1], x.shape),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_adversarial_order_still_correct():
+    lp = adversarial_lp(4, 64)
+    for key in (None, jax.random.key(0)):
+        sol = solve_batch_lp(lp, method="rgb", key=key)
+        assert_matches_scipy(lp, sol)
+
+
+def test_naive_and_rgb_agree():
+    lp = random_feasible_lp(jax.random.key(9), 64, 33)
+    nb = shuffle_batch(jax.random.key(2), normalize_batch(lp))
+    a = solve_batch_lp(nb, method="naive", normalize=False)
+    b = solve_batch_lp(nb, method="rgb", normalize=False)
+    np.testing.assert_array_equal(np.asarray(a.feasible),
+                                  np.asarray(b.feasible))
+    np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padding_neutral():
+    lp = random_feasible_lp(jax.random.key(11), 8, 17)
+    sol1 = solve_batch_lp(lp, method="rgb")
+    sol2 = solve_batch_lp(pad_batch(lp, 64), method="rgb")
+    np.testing.assert_allclose(np.asarray(sol1.x), np.asarray(sol2.x),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(batch=st.integers(1, 12), m=st.integers(3, 40),
+       seed=st.integers(0, 2**30))
+def test_solution_is_feasible_and_on_boundary(batch, m, seed):
+    """Any reported-feasible solution (a) satisfies all constraints to
+    tolerance and (b) either touches a constraint/box boundary or is the
+    unconstrained box corner."""
+    lp = random_feasible_lp(jax.random.key(seed), batch, m)
+    sol = solve_batch_lp(lp, method="rgb", key=jax.random.key(seed + 1))
+    A = np.asarray(lp.A, np.float64)
+    b = np.asarray(lp.b, np.float64)
+    x = np.asarray(sol.x, np.float64)
+    feas = np.asarray(sol.feasible)
+    nrm = np.linalg.norm(A, axis=-1)
+    for i in range(batch):
+        if not feas[i]:
+            continue
+        slack = b[i] - A[i] @ x[i]
+        assert (slack / np.maximum(nrm[i], 1e-9) > -1e-2).all(), \
+            f"violated constraint, problem {i}: min slack {slack.min()}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**30), m=st.integers(3, 30))
+def test_shuffle_invariance(seed, m):
+    """The optimum must not depend on the (random) consideration order."""
+    lp = random_feasible_lp(jax.random.key(seed), 6, m)
+    s1 = solve_batch_lp(lp, method="rgb", key=jax.random.key(1))
+    s2 = solve_batch_lp(lp, method="rgb", key=jax.random.key(2))
+    np.testing.assert_allclose(np.asarray(s1.objective),
+                               np.asarray(s2.objective),
+                               rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_adding_constraint_never_improves(seed):
+    """Monotonicity: the optimum of a superset of constraints is <= the
+    optimum of the subset (for maximisation)."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    lp_big = random_feasible_lp(k1, 4, 24)
+    lp_small = make_batch(lp_big.A[:, :12], lp_big.b[:, :12], lp_big.c)
+    s_small = solve_batch_lp(lp_small, method="rgb", key=k2)
+    s_big = solve_batch_lp(lp_big, method="rgb", key=k2)
+    ok = ~np.asarray(s_big.feasible) | (
+        np.asarray(s_big.objective)
+        <= np.asarray(s_small.objective) + 1e-2)
+    assert ok.all()
+
+
+def test_tie_breaking_deterministic():
+    """Degenerate objective (c parallel to a constraint edge) still gives
+    a unique, deterministic answer."""
+    A = np.array([[[0.0, 1.0], [1.0, 0.0]]] * 3)
+    b = np.array([[1.0, 1.0]] * 3)
+    c = np.array([[0.0, 1.0]] * 3)  # objective parallel to constraint 0
+    lp = make_batch(A, b, c)
+    s1 = solve_batch_lp(lp, method="rgb")
+    s2 = solve_batch_lp(lp, method="naive")
+    np.testing.assert_allclose(np.asarray(s1.x), np.asarray(s2.x),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1.x[:, 1]), 1.0, rtol=1e-5)

@@ -1,0 +1,242 @@
+"""Data pipeline, checkpointing, optimizer and fault-tolerance tests."""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.data.pipeline import DataConfig, TokenSource
+from repro.launch.elastic import Heartbeat, StragglerMonitor
+from repro.optim import (AdamW, apply_updates, compressed_psum,
+                         dequantize_int8, init_error_state,
+                         lp_constrain_updates, quantize_int8,
+                         sync_duplicated_grads)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=8, seed=3)
+    s1 = TokenSource(cfg)
+    s2 = TokenSource(cfg)
+    for step in (0, 5, 1000):
+        a = s1.global_batch(step)
+        b = s2.global_batch(step)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_data_host_sharding_partitions_global():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=12, seed=1)
+    src = TokenSource(cfg)
+    g = src.global_batch(7)
+    parts = [src.host_batch(7, h, 4) for h in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([p["tokens"] for p in parts]), g["tokens"])
+
+
+def test_data_labels_shifted():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=2, seed=0)
+    b = TokenSource(cfg).global_batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_file_source(tmp_path):
+    toks = np.arange(10000, dtype=np.uint32)
+    p = tmp_path / "toks.bin"
+    toks.tofile(p)
+    cfg = DataConfig(vocab=50000, seq_len=8, global_batch=2,
+                     source="file", path=str(p))
+    b0 = TokenSource(cfg).global_batch(0)
+    assert b0["tokens"].shape == (2, 8)
+    np.testing.assert_array_equal(b0["tokens"][0, :3], [0, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.zeros((2,), jnp.int32)}}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    tree = _tree()
+    ck.save(5, tree, extra={"next_step": 5}, blocking=True)
+    out, extra = ck.load(jax.eval_shape(lambda: tree))
+    assert extra["next_step"] == 5
+    for k, a, b in (("a", tree["a"], out["a"]),
+                    ("c", tree["b"]["c"], out["b"]["c"]),
+                    ("d", tree["b"]["d"], out["b"]["d"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype, k
+
+
+def test_ckpt_latest_pointer_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(), blocking=True)
+    assert ck.latest_step() == 4
+    dirs = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert dirs == ["step_00000003", "step_00000004"]
+
+
+def test_ckpt_crash_safety(tmp_path):
+    """A stale .tmp dir from a crashed save must not break the next one."""
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree(), blocking=True)
+    (tmp_path / "step_00000002.tmp").mkdir()
+    (tmp_path / "step_00000002.tmp" / "junk.npy").write_bytes(b"xx")
+    ck.save(2, _tree(), blocking=True)
+    assert ck.latest_step() == 2
+    out, _ = ck.load(jax.eval_shape(lambda: _tree()))
+    assert out["a"].shape == (2, 3)
+
+
+def test_ckpt_async(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(7, _tree(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+def test_ckpt_namedtuple_state(tmp_path):
+    opt = AdamW()
+    params = {"w": jnp.ones((3, 3))}
+    state = opt.init(params)
+    ck = Checkpointer(tmp_path)
+    ck.save(1, (params, state), blocking=True)
+    (p2, s2), _ = ck.load(jax.eval_shape(lambda: (params, state)))
+    assert type(s2).__name__ == "AdamWState"
+    np.testing.assert_array_equal(np.asarray(s2.m["w"]),
+                                  np.asarray(state.m["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_sync_duplicated_grads():
+    hd = 4
+    g = {"blocks": {"wk": jnp.arange(2 * 3 * 16, dtype=jnp.float32)
+                    .reshape(2, 3, 16)}}
+    out = sync_duplicated_grads(g, {"blocks/wk": 2}, hd)
+    w = np.asarray(out["blocks"]["wk"]).reshape(2, 3, 2, 2, hd)
+    np.testing.assert_allclose(w[..., 0, :], w[..., 1, :])
+    # averaging preserves the mean
+    np.testing.assert_allclose(np.asarray(out["blocks"]["wk"]).sum(),
+                               np.asarray(g["blocks"]["wk"]).sum(),
+                               rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_int8_quantization_error_bounded(seed):
+    g = jax.random.normal(jax.random.key(seed), (128,)) * 10
+    q, s = quantize_int8(g)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - g))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """With error feedback, the SUM of compressed steps converges to the
+    sum of true gradients (bias-free to first order)."""
+    rng = np.random.default_rng(0)
+    true = rng.standard_normal((64,)).astype(np.float32)
+    e = np.zeros_like(true)
+    acc = np.zeros_like(true)
+    for _ in range(300):
+        g32 = true + e
+        amax = np.abs(g32).max()
+        s = amax / 127.0 if amax > 0 else 1.0
+        q = np.clip(np.round(g32 / s), -127, 127)
+        e = g32 - q * s
+        acc += q * s
+    np.testing.assert_allclose(acc / 300, true, atol=1e-2)
+
+
+def test_lp_constrained_updates_shrink_when_binding():
+    """Huge proposed update vs tiny params -> trust region must bind and
+    scale the update down (s1 < 1)."""
+    params = {"w": jnp.ones((8,)) * 1e-3}
+    updates = {"w": jnp.ones((8,)) * 10.0}
+    grads = {"w": -jnp.ones((8,))}  # descent direction opposite to update?
+    momenta = {"w": jnp.zeros((8,))}
+    new, s1 = lp_constrain_updates(updates, grads, momenta, params,
+                                   delta=0.05)
+    assert float(s1) < 0.05
+    assert float(jnp.abs(new["w"]).max()) < 1.0
+
+
+def test_lp_constrained_updates_identity_when_safe():
+    params = {"w": jnp.ones((8,)) * 100.0}
+    updates = {"w": -jnp.ones((8,)) * 1e-3}
+    grads = {"w": jnp.ones((8,))}
+    momenta = {"w": jnp.ones((8,)) * 1e-6}
+    new, s1 = lp_constrain_updates(updates, grads, momenta, params)
+    assert float(s1) > 0.99
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               np.asarray(updates["w"]), rtol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_heartbeat(tmp_path):
+    hb = Heartbeat(tmp_path / "hb.json")
+    assert hb.age() == float("inf")
+    hb.beat(12)
+    assert hb.age() < 5
+    assert hb.read()["step"] == 12
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(threshold=3.0)
+    for i in range(20):
+        assert not m.record(i, 0.1)
+    assert m.record(20, 1.0)  # 10x median
+    assert m.flagged == [20]
+    assert not m.record(21, 0.12)
+
+
+def test_supervisor_restarts(tmp_path):
+    """Driver that crashes once, then succeeds — supervisor must restart
+    it and return 0."""
+    import sys
+    from repro.launch.elastic import Supervisor
+    marker = tmp_path / "crashed_once"
+    hb = tmp_path / "hb.json"
+    code = (
+        "import json,sys,time,os\n"
+        f"m = {str(marker)!r}\n"
+        f"hb = {str(hb)!r}\n"
+        "open(hb,'w').write(json.dumps({'step':0,'t':time.time()}))\n"
+        "if not os.path.exists(m):\n"
+        "    open(m,'w').write('x'); sys.exit(3)\n"
+        "sys.exit(0)\n")
+    sup = Supervisor([sys.executable, "-c", code], hb,
+                     stall_timeout=60, max_restarts=3, poll=0.1)
+    assert sup.run() == 0
+    assert sup.restarts == 1
