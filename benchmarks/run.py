@@ -15,17 +15,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma-separated figure names (fig3..fig7)")
+                    help="comma-separated names (fig3..fig7, serve)")
     args = ap.parse_args()
 
     from benchmarks import (fig3_lp_size, fig4_batch, fig5_transfer,
-                            fig6_reduction, fig7_naive_vs_rgb)
+                            fig6_reduction, fig7_naive_vs_rgb, serve_bench)
     figs = {
         "fig3": fig3_lp_size.run,
         "fig4": fig4_batch.run,
         "fig5": fig5_transfer.run,
         "fig6": fig6_reduction.run,
         "fig7": fig7_naive_vs_rgb.run,
+        "serve": serve_bench.run,
     }
     only = set(args.only.split(",")) if args.only else set(figs)
     print("name,us_per_call,derived")

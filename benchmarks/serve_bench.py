@@ -1,0 +1,29 @@
+"""Serving-layer benchmark: open-loop traffic through repro.serve_lp.
+
+Emits one CSV row per traffic profile: us_per_call is mean end-to-end
+request latency; derived packs throughput / p99 / padding / cache-hit
+numbers.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.serve_lp.bench import BenchConfig, run_traffic, smoke_config
+
+
+def run(full: bool = False) -> None:
+    profiles = {"serve_smoke": smoke_config()}
+    if full:
+        profiles["serve_open_loop"] = BenchConfig(
+            requests=2000, rate=5000.0, m_max=1024, max_batch=128,
+            max_wait_s=0.02)
+        profiles["serve_kernel"] = BenchConfig(
+            requests=256, rate=2000.0, m_max=256, max_batch=64,
+            method="kernel", check=4)
+    for name, cfg in profiles.items():
+        snap, _ = run_traffic(cfg, quiet=True)
+        emit(name, snap["latency_mean_ms"] / 1e3,
+             f"lps={snap['throughput_lps']:.1f}"
+             f"|p50ms={snap['latency_p50_ms']:.2f}"
+             f"|p99ms={snap['latency_p99_ms']:.2f}"
+             f"|waste_cells={snap['padding_waste_cells']:.3f}"
+             f"|cache_hit={snap['cache']['hit_rate']:.3f}")

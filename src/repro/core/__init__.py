@@ -3,20 +3,24 @@ from repro.core.lp import (
     LPBatch,
     LPSolution,
     adversarial_lp,
+    concat_batches,
     infeasible_lp,
     make_batch,
     normalize_batch,
     pad_batch,
+    pad_batch_dim,
     ragged_feasible_lp,
     random_feasible_lp,
     replicated_lp,
     shuffle_batch,
+    split_batch,
 )
 from repro.core.seidel import solve_batch_lp, solve_naive, solve_rgb
 
 __all__ = [
-    "LPBatch", "LPSolution", "adversarial_lp", "infeasible_lp", "make_batch",
-    "normalize_batch", "pad_batch", "ragged_feasible_lp", "random_feasible_lp",
-    "replicated_lp", "shuffle_batch", "solve_batch_lp", "solve_naive",
-    "solve_rgb",
+    "LPBatch", "LPSolution", "adversarial_lp", "concat_batches",
+    "infeasible_lp", "make_batch", "normalize_batch", "pad_batch",
+    "pad_batch_dim", "ragged_feasible_lp", "random_feasible_lp",
+    "replicated_lp", "shuffle_batch", "split_batch", "solve_batch_lp",
+    "solve_naive", "solve_rgb",
 ]

@@ -81,6 +81,63 @@ def pad_batch(batch: LPBatch, m_pad: int) -> LPBatch:
     )
 
 
+def pad_batch_dim(batch: LPBatch, b_pad: int) -> LPBatch:
+    """Pad the *batch* dimension up to ``b_pad`` with neutral problems
+    (m_valid=0, c=(1,0)): they solve at the box corner in zero iterations
+    and never trigger a re-solve."""
+    B, m = batch.batch, batch.m
+    if b_pad < B:
+        raise ValueError(f"b_pad={b_pad} < batch={B}")
+    if b_pad == B:
+        return batch
+    pad = b_pad - B
+    dt = batch.A.dtype
+    return LPBatch(
+        A=jnp.concatenate(
+            [batch.A, jnp.broadcast_to(jnp.asarray(PAD_A, dt),
+                                       (pad, m, 2))]),
+        b=jnp.concatenate([batch.b, jnp.full((pad, m), PAD_B, dt)]),
+        c=jnp.concatenate(
+            [batch.c, jnp.broadcast_to(jnp.asarray([1.0, 0.0], dt),
+                                       (pad, 2))]),
+        m_valid=jnp.concatenate(
+            [batch.m_valid, jnp.zeros((pad,), jnp.int32)]),
+    )
+
+
+def concat_batches(batches: list[LPBatch]) -> LPBatch:
+    """Fuse several batches into one super-batch: every member is padded
+    (neutral rows) to the largest constraint count, then stacked along the
+    batch dimension.  For callers fusing pre-built batches offline; the
+    serving scheduler assembles the same layout host-side in numpy
+    (serve_lp.scheduler._solve) to keep flushes off the device."""
+    if not batches:
+        raise ValueError("concat_batches of empty list")
+    m_max = max(b.m for b in batches)
+    padded = [pad_batch(b, m_max) for b in batches]
+    return LPBatch(
+        A=jnp.concatenate([b.A for b in padded]),
+        b=jnp.concatenate([b.b for b in padded]),
+        c=jnp.concatenate([b.c for b in padded]),
+        m_valid=jnp.concatenate([b.m_valid for b in padded]),
+    )
+
+
+def split_batch(batch: LPBatch, sizes: list[int]) -> list[LPBatch]:
+    """Inverse of :func:`concat_batches`: slice the batch dimension back
+    into consecutive pieces of the given sizes (padding rows kept)."""
+    if sum(sizes) > batch.batch:
+        raise ValueError(
+            f"split sizes {sizes} exceed batch {batch.batch}")
+    out, lo = [], 0
+    for s in sizes:
+        out.append(LPBatch(A=batch.A[lo:lo + s], b=batch.b[lo:lo + s],
+                           c=batch.c[lo:lo + s],
+                           m_valid=batch.m_valid[lo:lo + s]))
+        lo += s
+    return out
+
+
 def normalize_batch(batch: LPBatch, eps: float = 1e-30) -> LPBatch:
     """Scale every constraint so ||a_h|| = 1 (zero-norm padding rows kept).
 

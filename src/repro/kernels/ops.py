@@ -16,11 +16,20 @@ from repro.core.lp import LPBatch, LPSolution, PAD_B, normalize_batch
 from repro.kernels.batch_lp import LANE, _pick_tile, rgb_pallas
 
 
-def pack_constraints(batch: LPBatch):
+def pack_constraints(batch: LPBatch, m_pad: int | None = None):
     """LPBatch -> (L (B,4,m_pad), c (B,2), m_valid (B,1)) with unit-norm
-    rows assumed (call lp.normalize_batch first)."""
+    rows assumed (call lp.normalize_batch first).
+
+    ``m_pad`` overrides the lane padding target: the serving layer passes
+    its shape bucket here so every batch in a bucket packs to the *same*
+    layout and hits the same compiled executable, instead of recomputing a
+    per-call minimal padding."""
     B, m = batch.batch, batch.m
-    m_pad = -(-m // LANE) * LANE
+    if m_pad is None:
+        m_pad = -(-m // LANE) * LANE
+    if m_pad < m or m_pad % LANE:
+        raise ValueError(f"m_pad={m_pad} must be a multiple of {LANE} "
+                         f">= m={m}")
     dt = batch.A.dtype
     ax = batch.A[..., 0]
     ay = batch.A[..., 1]
@@ -74,7 +83,7 @@ def solve_batch_lp_kernel(
     if normalize:
         batch = normalize_batch(batch)
     L, c, mv = pack_constraints(batch)
-    T = tile or _pick_tile(L.shape[-1])
+    T = tile or _pick_tile(L.shape[-1], L.shape[0])
     x, feas = _solve_packed(L, c, mv, M=M, tile=T, chunk=chunk,
                             interpret=interpret)
     return LPSolution(

@@ -1,0 +1,28 @@
+"""Batched LP serving subsystem.
+
+Turns the batch 2-D LP solver stack into a service: callers submit
+individual LPs of arbitrary constraint count and get futures back; a
+scheduler aggregates them into shape-bucketed super-batches, solves each
+flush through a cached executable (sharded across devices when more than
+one is visible) and scatters results to the futures in submission order.
+
+    scheduler (submit/flush policy)
+        -> buckets (shape ladder + executable cache)
+        -> sharding (pmap across jax.devices(), single-device fallback)
+        -> futures (per-request LPResult)
+
+Use :class:`BatchScheduler` when requests arrive one at a time (serving,
+simulation agents, RPC handlers); call :func:`repro.core.solve_batch_lp`
+directly when you already hold one uniform batch.
+"""
+from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
+                                    bucket_m, shape_ladder)
+from repro.serve_lp.metrics import ServeMetrics
+from repro.serve_lp.scheduler import BatchScheduler, LPResult
+from repro.serve_lp.sharding import build_executable
+
+__all__ = [
+    "BatchScheduler", "ExecSpec", "ExecutableCache", "LPResult",
+    "ServeMetrics", "bucket_batch", "bucket_m", "build_executable",
+    "shape_ladder",
+]

@@ -1,0 +1,227 @@
+"""Open-loop serving benchmark for the LP scheduler.
+
+Synthetic traffic is drawn from deterministic numpy generators (seeded,
+pipeline-style): constraint counts are mixed across a log2 ladder and
+each request is feasible, infeasible or degenerate (all constraints
+tight at one point) per a fixed mix.  Requests are submitted open-loop
+at a target rate; the report covers throughput, p50/p99 latency,
+padding waste and executable-cache hit rate.
+
+    python -m repro.serve_lp.bench --smoke
+    python -m repro.serve_lp.bench --requests 2000 --rate 5000 \
+        --method kernel --max-batch 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve_lp.scheduler import BatchScheduler
+
+KINDS = ("feasible", "infeasible", "degenerate")
+
+
+@dataclasses.dataclass
+class BenchConfig:
+    requests: int = 2000
+    rate: float = 5000.0          # target submit rate, LPs/s
+    m_min: int = 8
+    m_max: int = 1024
+    kind_mix: Tuple[float, float, float] = (0.8, 0.1, 0.1)
+    method: str = "rgb"
+    max_batch: int = 64
+    max_wait_s: float = 0.02
+    tile: int = 16
+    chunk: int = 0
+    seed: int = 0
+    check: int = 8                # requests re-solved directly, 0 = off
+    warmup: bool = True           # pre-compile executables, reset counters
+    interpret: Optional[bool] = None
+
+
+def smoke_config() -> BenchConfig:
+    """CI-sized run: a few hundred LPs, m capped so only a handful of
+    executables compile; finishes well inside 30s on CPU."""
+    return BenchConfig(requests=160, rate=2000.0, m_max=512,
+                       max_batch=32, max_wait_s=0.01, check=8)
+
+
+# -- deterministic request generators (numpy mirrors of core.lp) ---------
+
+def _feasible(rng: np.random.Generator, m: int, slack_lo: float = 0.1):
+    xstar = rng.uniform(-50.0, 50.0, 2)
+    theta = rng.uniform(0.0, 2.0 * np.pi, m)
+    A = np.stack([np.cos(theta), np.sin(theta)], axis=-1)
+    s = rng.uniform(slack_lo, 5.0, m)
+    b = A @ xstar + s
+    phi = rng.uniform(0.0, 2.0 * np.pi)
+    c = np.array([np.cos(phi), np.sin(phi)])
+    return (A.astype(np.float32), b.astype(np.float32),
+            c.astype(np.float32))
+
+
+def _degenerate(rng: np.random.Generator, m: int):
+    """Every constraint tight at one point: the feasible set collapses to
+    a single massively-degenerate vertex."""
+    A, b, c = _feasible(rng, m)
+    xstar = rng.uniform(-50.0, 50.0, 2).astype(np.float32)
+    b = (A @ xstar).astype(np.float32)
+    return A, b, c
+
+
+def _infeasible(rng: np.random.Generator, m: int):
+    A, b, c = _feasible(rng, m)
+    A[0] = (1.0, 0.0)
+    b[0] = -1.0
+    A[1] = (-1.0, 0.0)
+    b[1] = -1.0
+    return A, b, c
+
+
+_GEN = {"feasible": _feasible, "infeasible": _infeasible,
+        "degenerate": _degenerate}
+
+
+def make_request(cfg: BenchConfig, i: int):
+    """Request #i of the stream — a pure function of (seed, i)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, i, 0x52E41]))
+    sizes = [m for m in (8, 16, 32, 64, 128, 256, 512, 1024)
+             if cfg.m_min <= m <= cfg.m_max]
+    m = int(sizes[rng.integers(len(sizes))])
+    kind = KINDS[rng.choice(3, p=np.asarray(cfg.kind_mix))]
+    A, b, c = _GEN[kind](rng, max(m, 2))
+    return A, b, c, kind
+
+
+# -- the open-loop driver ------------------------------------------------
+
+def _warmup(cfg: BenchConfig, sched: BatchScheduler,
+            quiet: bool) -> None:
+    """Pre-compile the steady-state executables — every (m-bucket,
+    b_pad-rung) pair traffic can produce, wait-triggered partial flushes
+    included — then zero all counters so the report shows warm serving
+    behaviour."""
+    from repro.serve_lp.buckets import bucket_batch, bucket_m
+    from repro.serve_lp.metrics import ServeMetrics
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 0xAA]))
+    buckets = sorted({bucket_m(m, base=sched.bucket_base) for m in
+                      (8, 16, 32, 64, 128, 256, 512, 1024)
+                      if cfg.m_min <= m <= cfg.m_max})
+    # b_pad ladder: a flush holds 1..max_batch requests, so its b_pad is
+    # one of the unit*2^k rungs up to bucket_batch(max_batch, unit).
+    rungs, b = set(), sched.batch_unit
+    top = bucket_batch(cfg.max_batch, sched.batch_unit)
+    while b <= top:
+        rungs.add(min(b, cfg.max_batch))
+        b *= 2
+    for bm in buckets:
+        for n in sorted(rungs):
+            futs = [sched.submit(*_feasible(rng, min(bm, cfg.m_max)))
+                    for _ in range(n)]
+            sched.flush()
+            for f in futs:
+                f.result(timeout=300.0)
+    sched.cache.reset_stats()
+    sched.metrics = ServeMetrics()
+    if not quiet:
+        print(f"[serve_lp.bench] warmup built {len(sched.cache)} "
+              f"executables in {time.perf_counter() - t0:.2f}s")
+
+
+def run_traffic(cfg: BenchConfig, *, quiet: bool = False
+                ) -> Tuple[Dict, BatchScheduler]:
+    sched = BatchScheduler(
+        method=cfg.method, max_batch=cfg.max_batch,
+        max_wait_s=cfg.max_wait_s, tile=cfg.tile, chunk=cfg.chunk,
+        interpret=cfg.interpret)
+    if cfg.warmup:
+        _warmup(cfg, sched, quiet)
+    futures: List = []
+    t_wall0 = time.perf_counter()
+    with sched:
+        t0 = time.perf_counter()
+        for i in range(cfg.requests):
+            target = t0 + i / cfg.rate
+            now = time.perf_counter()
+            if target > now:
+                time.sleep(target - now)
+            A, b, c, _ = make_request(cfg, i)
+            futures.append(sched.submit(A, b, c))
+    # context exit stops the timer thread and flushes the tail
+    results = [f.result(timeout=60.0) for f in futures]
+    wall = time.perf_counter() - t_wall0
+
+    if cfg.check:
+        _check_against_direct(cfg, results)
+    snap = sched.metrics.snapshot(sched.cache.stats())
+    snap["wall_s"] = wall
+    snap["n_feasible"] = sum(r.feasible for r in results)
+    if not quiet:
+        print(f"[serve_lp.bench] {cfg.requests} requests "
+              f"({snap['n_feasible']} feasible) wall={wall:.2f}s")
+        print(sched.metrics.format_report(sched.cache.stats()))
+        if cfg.check:
+            print(f"[serve_lp.bench] check ok: {cfg.check} requests "
+                  "match direct solve_batch_lp")
+    return snap, sched
+
+
+def _check_against_direct(cfg: BenchConfig, results: List) -> None:
+    """Re-solve a deterministic subset directly and compare."""
+    from repro.core import make_batch, solve_batch_lp
+    idxs = np.linspace(0, cfg.requests - 1, cfg.check).astype(int)
+    for i in idxs:
+        A, b, c, _ = make_request(cfg, int(i))
+        sol = solve_batch_lp(
+            make_batch(A, b, c), method=cfg.method, tile=cfg.tile,
+            chunk=cfg.chunk,
+            **({"interpret": True} if cfg.method == "kernel" else {}))
+        r = results[int(i)]
+        assert bool(sol.feasible[0]) == r.feasible, (
+            f"request {i}: feasible mismatch")
+        if r.feasible:
+            np.testing.assert_allclose(np.asarray(sol.x[0]), r.x,
+                                       rtol=1e-5, atol=1e-5)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized preset (overrides size args)")
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--rate", type=float, default=5000.0)
+    ap.add_argument("--m-max", type=int, default=1024)
+    ap.add_argument("--method", default="rgb",
+                    choices=("rgb", "kernel", "naive"))
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--tile", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", type=int, default=8)
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip executable pre-compilation")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = smoke_config()
+        cfg.method = args.method
+        cfg.seed = args.seed
+    else:
+        cfg = BenchConfig(
+            requests=args.requests, rate=args.rate, m_max=args.m_max,
+            method=args.method, max_batch=args.max_batch,
+            max_wait_s=args.max_wait_ms / 1e3, tile=args.tile,
+            chunk=args.chunk, seed=args.seed, check=args.check)
+    cfg.warmup = not args.no_warmup
+    run_traffic(cfg)
+
+
+if __name__ == "__main__":
+    main()

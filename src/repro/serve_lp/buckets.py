@@ -1,0 +1,136 @@
+"""Shape bucketing and the executable cache.
+
+Heterogeneous request streams would otherwise produce one XLA compile per
+distinct ``(B, m)`` — the bucketing here rounds both dimensions up a small
+geometric ladder so steady-state traffic lands on a bounded set of
+executables:
+
+* the constraint dimension ``m`` rounds up to ``base * 2^k`` — base is
+  LANE (128) for the Pallas kernel, which needs a 128-lane multiple
+  anyway, and 8 for the dense solvers, which have no layout requirement
+  and should not pad an m=8 LP 16x (doubling bounds waste at 2x and
+  caps the ladder at ~log2(m_max/base) rungs);
+* the batch dimension rounds up to ``unit * 2^k`` where ``unit`` is
+  ``tile * n_devices`` (the kernel needs a tile multiple per device;
+  doubling again bounds the rung count).
+
+The :class:`ExecutableCache` maps an :class:`ExecSpec` (the full shape +
+method key) to a built solver callable and counts hits/misses so the
+serving metrics can prove the bucketing works.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List
+
+from repro.kernels.batch_lp import LANE
+
+
+def bucket_m(m: int, *, base: int = LANE) -> int:
+    """Round a constraint count up to the geometric LANE ladder
+    {base, 2*base, 4*base, ...}."""
+    if m < 1:
+        raise ValueError(f"m={m} < 1")
+    b = base
+    while b < m:
+        b *= 2
+    return b
+
+
+def bucket_batch(batch: int, unit: int) -> int:
+    """Round a flush size up to the geometric ladder of ``unit``
+    multiples {unit, 2*unit, 4*unit, ...}."""
+    if batch < 1:
+        raise ValueError(f"batch={batch} < 1")
+    b = unit
+    while b < batch:
+        b *= 2
+    return b
+
+
+def shape_ladder(m_max: int, *, base: int = LANE) -> List[int]:
+    """All m-buckets needed to cover constraint counts up to ``m_max``."""
+    out = [base]
+    while out[-1] < m_max:
+        out.append(out[-1] * 2)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """Everything that determines a compiled solver executable."""
+
+    bucket_m: int      # padded constraint count (LANE multiple)
+    b_pad: int         # padded batch size (tile * n_devices multiple)
+    method: str        # "rgb" | "kernel" | "naive"
+    tile: int
+    chunk: int
+    n_devices: int = 1
+    M: float = 1.0e4
+    normalize: bool = True
+    interpret: bool = False
+
+    def __post_init__(self):
+        if self.bucket_m < 1:
+            raise ValueError(f"bucket_m={self.bucket_m} < 1")
+        # Only the Pallas kernel has a lane-layout requirement.
+        if self.method == "kernel" and self.bucket_m % LANE:
+            raise ValueError(f"bucket_m={self.bucket_m} not a {LANE} "
+                             "multiple")
+        if self.b_pad % (self.tile * self.n_devices):
+            raise ValueError(
+                f"b_pad={self.b_pad} not a multiple of tile*n_devices="
+                f"{self.tile * self.n_devices}")
+
+
+class ExecutableCache:
+    """spec -> built executable, with hit/miss accounting.
+
+    ``builder`` is called under the cache lock on a miss; the returned
+    callable is stored and reused for every later flush with the same
+    spec.  (The first *invocation* still pays the XLA compile — the cache
+    bounds how often that happens, it does not hide it.)
+    """
+
+    def __init__(self, builder: Callable[[ExecSpec], Callable]):
+        self._builder = builder
+        self._cache: Dict[ExecSpec, Callable] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, spec: ExecSpec) -> Callable:
+        with self._lock:
+            fn = self._cache.get(spec)
+            if fn is not None:
+                self.hits += 1
+                return fn
+            self.misses += 1
+            fn = self._cache[spec] = self._builder(spec)
+            return fn
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "size": len(self._cache),
+            "hit_rate": self.hits / total if total else 0.0,
+        }
+
+    def reset_stats(self) -> None:
+        """Zero the hit/miss counters but keep built executables — used
+        after a warmup pass so reports show steady-state behaviour."""
+        with self._lock:
+            self.hits = 0
+            self.misses = 0
+
+    def clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self.hits = 0
+            self.misses = 0

@@ -1,0 +1,132 @@
+"""Serving metrics: latency percentiles, throughput, padding waste.
+
+Everything is recorded under one lock (submit, flush and timer threads
+all write here) and summarised by :meth:`ServeMetrics.snapshot`.  Padding
+waste is tracked two ways because they answer different questions:
+
+* *problem* waste — neutral problems added to pad the batch dimension;
+  these cost kernel time directly;
+* *cell* waste — padded constraint rows (bucket_m - m per request) plus
+  all cells of padding problems; this is the VMEM/bandwidth overhead of
+  shape bucketing.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+_MAX_LATENCIES = 200_000  # reservoir cap; plenty for bench runs
+
+
+class ServeMetrics:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._latencies: List[float] = []
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self.n_solved = 0
+        self.n_flushes = 0
+        self.flush_reasons: Dict[str, int] = {}
+        self.problems_real = 0
+        self.problems_padded = 0
+        self.cells_valid = 0
+        self.cells_total = 0
+        self.solve_seconds = 0.0
+
+    def touch_clock(self) -> None:
+        """Mark traffic activity (throughput is solved / active window)."""
+        now = time.perf_counter()
+        with self._lock:
+            if self._t0 is None:
+                self._t0 = now
+            self._t_last = now
+
+    def record_latency(self, seconds: float) -> None:
+        with self._lock:
+            if len(self._latencies) < _MAX_LATENCIES:
+                self._latencies.append(seconds)
+
+    def record_flush(self, *, n_real: int, b_pad: int, bucket_m: int,
+                     sum_m: int, solve_seconds: float,
+                     reason: str) -> None:
+        with self._lock:
+            self.n_flushes += 1
+            self.flush_reasons[reason] = (
+                self.flush_reasons.get(reason, 0) + 1)
+            self.n_solved += n_real
+            self.problems_real += n_real
+            self.problems_padded += b_pad - n_real
+            self.cells_valid += sum_m
+            self.cells_total += b_pad * bucket_m
+            self.solve_seconds += solve_seconds
+            self._t_last = time.perf_counter()
+            if self._t0 is None:
+                self._t0 = self._t_last
+
+    def percentile(self, p: float) -> float:
+        """Linear-interpolated percentile of recorded latencies, seconds."""
+        with self._lock:
+            xs = sorted(self._latencies)
+        if not xs:
+            return float("nan")
+        if len(xs) == 1:
+            return xs[0]
+        k = (p / 100.0) * (len(xs) - 1)
+        lo = int(k)
+        hi = min(lo + 1, len(xs) - 1)
+        return xs[lo] + (xs[hi] - xs[lo]) * (k - lo)
+
+    def snapshot(self, cache_stats: Optional[Dict] = None) -> Dict:
+        with self._lock:
+            elapsed = ((self._t_last - self._t0)
+                       if self._t0 is not None and self._t_last is not None
+                       else 0.0)
+            n_lat = len(self._latencies)
+            mean = (sum(self._latencies) / n_lat) if n_lat else float("nan")
+            prob_total = self.problems_real + self.problems_padded
+            snap = {
+                "n_solved": self.n_solved,
+                "n_flushes": self.n_flushes,
+                "flush_reasons": dict(self.flush_reasons),
+                "elapsed_s": elapsed,
+                "throughput_lps": (self.n_solved / elapsed
+                                   if elapsed > 0 else float("nan")),
+                "latency_mean_ms": mean * 1e3,
+                "solve_seconds": self.solve_seconds,
+                "padding_waste_problems": (
+                    self.problems_padded / prob_total if prob_total
+                    else 0.0),
+                "padding_waste_cells": (
+                    1.0 - self.cells_valid / self.cells_total
+                    if self.cells_total else 0.0),
+            }
+        snap["latency_p50_ms"] = self.percentile(50.0) * 1e3
+        snap["latency_p99_ms"] = self.percentile(99.0) * 1e3
+        if cache_stats is not None:
+            snap["cache"] = dict(cache_stats)
+        return snap
+
+    def format_report(self, cache_stats: Optional[Dict] = None) -> str:
+        s = self.snapshot(cache_stats)
+        lines = [
+            f"solved {s['n_solved']} LPs in {s['n_flushes']} flushes "
+            f"over {s['elapsed_s']:.2f}s "
+            f"({s['throughput_lps']:.1f} LPs/s)",
+            f"latency ms: p50={s['latency_p50_ms']:.2f} "
+            f"p99={s['latency_p99_ms']:.2f} "
+            f"mean={s['latency_mean_ms']:.2f}",
+            f"padding waste: problems "
+            f"{100 * s['padding_waste_problems']:.1f}%  cells "
+            f"{100 * s['padding_waste_cells']:.1f}%",
+            "flushes by trigger: " + (", ".join(
+                f"{k}={v}" for k, v in
+                sorted(s['flush_reasons'].items())) or "none"),
+        ]
+        if "cache" in s:
+            c = s["cache"]
+            lines.append(
+                f"executable cache: {c['size']} built, {c['hits']} hits "
+                f"/ {c['misses']} misses "
+                f"({100 * c['hit_rate']:.1f}% hit rate)")
+        return "\n".join(lines)

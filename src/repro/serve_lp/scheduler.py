@@ -1,0 +1,285 @@
+"""Micro-batching scheduler: per-request submit/future API over the
+batch solver.
+
+Requests land in per-``bucket_m`` queues.  A queue flushes when it
+reaches ``max_batch`` (size trigger, runs inline on the submitting
+thread so a full batch never waits) or when its oldest request exceeds
+``max_wait_s`` (wait trigger, run by a background timer thread started
+via ``with scheduler:`` or :meth:`start`).  ``flush()`` drains
+everything immediately — the deterministic path used by tests and
+step-synchronous callers like the crowd simulation.
+
+A flush pads the batch dimension up the geometric ladder (see
+``buckets``), fetches the executable for its :class:`~repro.serve_lp.
+buckets.ExecSpec` from the cache, solves, and resolves each future with
+an :class:`LPResult` in submission order.  Solver failures propagate to
+every future of the flush via ``set_exception``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.lp import PAD_A, PAD_B
+from repro.core.seidel import DEFAULT_M
+from repro.kernels.batch_lp import LANE
+from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
+                                    bucket_m)
+from repro.serve_lp.metrics import ServeMetrics
+from repro.serve_lp.sharding import build_executable
+
+
+@dataclasses.dataclass(frozen=True)
+class LPResult:
+    """Per-request solve result delivered through the future."""
+
+    x: np.ndarray        # (2,) argmax (garbage where infeasible)
+    feasible: bool
+    objective: float     # c @ x
+    m: int               # the request's own constraint count
+    bucket_m: int        # shape bucket it was solved in
+    batch_size: int      # real requests fused into its flush
+    latency_s: float     # submit -> result
+
+
+@dataclasses.dataclass
+class _Pending:
+    A: np.ndarray
+    b: np.ndarray
+    c: np.ndarray
+    m: int
+    future: Future
+    t_submit: float
+
+
+class BatchScheduler:
+    """Accumulate single 2-D LPs into bucketed super-batches and solve.
+
+    Parameters
+    ----------
+    method, tile, chunk, M, normalize, interpret:
+        forwarded into the :class:`ExecSpec` (see ``core.solve_batch_lp``
+        for their meaning).  ``interpret=None`` resolves to True on a CPU
+        backend so the Pallas kernel stays runnable in tests/CI.
+    max_batch:
+        size trigger — a bucket flushes as soon as it holds this many.
+    max_wait_s:
+        wait trigger — no request waits longer than this once the
+        background thread is running.
+    devices:
+        device list to shard flushes over; default ``jax.devices()``.
+    """
+
+    def __init__(
+        self,
+        *,
+        method: str = "rgb",
+        max_batch: int = 256,
+        max_wait_s: float = 0.005,
+        tile: int = 32,
+        chunk: int = 0,
+        M: float = DEFAULT_M,
+        normalize: bool = True,
+        interpret: Optional[bool] = None,
+        devices: Optional[Sequence] = None,
+        metrics: Optional[ServeMetrics] = None,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch={max_batch} < 1")
+        self.method = method
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.tile = tile
+        self.chunk = chunk
+        self.M = M
+        self.normalize = normalize
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        self.interpret = interpret
+        # Only the Pallas kernel needs LANE-multiple constraint counts;
+        # the dense solvers bucket on a finer ladder so tiny LPs are not
+        # padded 16x (crowd_sim submits m=8).
+        self.bucket_base = LANE if method == "kernel" else 8
+        self._devices = (list(devices) if devices is not None
+                         else jax.devices())
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.cache = ExecutableCache(
+            lambda spec: build_executable(spec, self._devices))
+        self._queues: Dict[int, List[_Pending]] = {}
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._closed = False
+
+    @property
+    def n_devices(self) -> int:
+        return len(self._devices)
+
+    @property
+    def batch_unit(self) -> int:
+        """Flush sizes pad to multiples of this (tile per device)."""
+        return self.tile * len(self._devices)
+
+    # -- submission ------------------------------------------------------
+
+    def submit(self, A, b, c) -> Future:
+        """Submit one LP (A (m,2), b (m,), c (2,)); returns a Future
+        resolving to :class:`LPResult`."""
+        A = np.asarray(A, np.float32).reshape(-1, 2)
+        m = A.shape[0]
+        b = np.asarray(b, np.float32).reshape(m)
+        c = np.asarray(c, np.float32).reshape(2)
+        if m < 1:
+            raise ValueError("LP needs at least one constraint")
+        if self._closed:
+            raise RuntimeError("scheduler is closed")
+        fut: Future = Future()
+        req = _Pending(A=A, b=b, c=c, m=m, future=fut,
+                       t_submit=time.perf_counter())
+        bm = bucket_m(m, base=self.bucket_base)
+        self.metrics.touch_clock()
+        ready = None
+        with self._lock:
+            q = self._queues.setdefault(bm, [])
+            q.append(req)
+            if len(q) >= self.max_batch:
+                ready = self._queues.pop(bm)
+        if ready is not None:
+            self._solve(bm, ready, reason="size")
+        return fut
+
+    def submit_many(self, As, bs, cs, m_valid=None) -> List[Future]:
+        """Row-wise submit of stacked arrays (B, m, 2)/(B, m)/(B, 2);
+        ``m_valid`` optionally trims each problem's constraint count."""
+        As = np.asarray(As, np.float32)
+        bs = np.asarray(bs, np.float32)
+        cs = np.asarray(cs, np.float32)
+        B = As.shape[0]
+        if m_valid is None:
+            m_valid = np.full((B,), As.shape[1], np.int32)
+        else:
+            m_valid = np.asarray(m_valid, np.int32)
+        return [self.submit(As[i, :m_valid[i]], bs[i, :m_valid[i]], cs[i])
+                for i in range(B)]
+
+    # -- flushing --------------------------------------------------------
+
+    def flush(self) -> int:
+        """Drain all buckets now (manual trigger); returns LPs solved."""
+        with self._lock:
+            drained = [(bm, q) for bm, q in self._queues.items() if q]
+            self._queues = {}
+        n = 0
+        for bm, reqs in drained:
+            self._solve(bm, reqs, reason="manual")
+            n += len(reqs)
+        return n
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+    def _flush_expired(self) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            expired = [
+                (bm, q) for bm, q in self._queues.items()
+                if q and now - q[0].t_submit >= self.max_wait_s]
+            for bm, _ in expired:
+                self._queues.pop(bm)
+        for bm, reqs in expired:
+            self._solve(bm, reqs, reason="wait")
+
+    # -- background wait-trigger thread ----------------------------------
+
+    def start(self) -> "BatchScheduler":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._timer_loop, name="serve-lp-flush", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, *, final_flush: bool = True) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+        if final_flush:
+            self.flush()
+
+    def __enter__(self) -> "BatchScheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def close(self) -> None:
+        self.stop()
+        self._closed = True
+
+    def _timer_loop(self) -> None:
+        tick = max(self.max_wait_s / 4.0, 1e-4)
+        while not self._stop.wait(tick):
+            try:
+                self._flush_expired()
+            except Exception:
+                # The flush's futures already carry the exception; the
+                # timer must survive so later buckets still get flushed.
+                pass
+
+    # -- the solve path --------------------------------------------------
+
+    def _solve(self, bm: int, reqs: List[_Pending], *, reason: str) -> None:
+        B = len(reqs)
+        b_pad = bucket_batch(B, self.batch_unit)
+        # Host-side numpy mirror of lp.pad_batch / lp.pad_batch_dim (same
+        # neutral-row and neutral-problem convention) — assembled here so
+        # a flush does no device work before the cached executable runs.
+        A = np.broadcast_to(np.asarray(PAD_A, np.float32),
+                            (b_pad, bm, 2)).copy()
+        b = np.full((b_pad, bm), PAD_B, np.float32)
+        c = np.broadcast_to(np.asarray([1.0, 0.0], np.float32),
+                            (b_pad, 2)).copy()
+        mv = np.zeros((b_pad,), np.int32)
+        for i, r in enumerate(reqs):
+            A[i, :r.m] = r.A
+            b[i, :r.m] = r.b
+            c[i] = r.c
+            mv[i] = r.m
+        spec = ExecSpec(
+            bucket_m=bm, b_pad=b_pad, method=self.method, tile=self.tile,
+            chunk=self.chunk, n_devices=len(self._devices), M=self.M,
+            normalize=self.normalize, interpret=self.interpret)
+        try:
+            fn = self.cache.get(spec)
+            t0 = time.perf_counter()
+            x, feas = fn(A, b, c, mv)
+            dt_solve = time.perf_counter() - t0
+        except Exception as e:  # propagate to every waiter, don't hang
+            for r in reqs:
+                r.future.set_exception(e)
+            raise
+        now = time.perf_counter()
+        for i, r in enumerate(reqs):
+            xi = np.asarray(x[i])
+            r.future.set_result(LPResult(
+                x=xi,
+                feasible=bool(feas[i]),
+                objective=float(r.c @ xi),
+                m=r.m,
+                bucket_m=bm,
+                batch_size=B,
+                latency_s=now - r.t_submit,
+            ))
+            self.metrics.record_latency(now - r.t_submit)
+        self.metrics.record_flush(
+            n_real=B, b_pad=b_pad, bucket_m=bm,
+            sum_m=sum(r.m for r in reqs), solve_seconds=dt_solve,
+            reason=reason)

@@ -1,0 +1,89 @@
+"""Executable builder: one ExecSpec -> one device-spanning solver fn.
+
+Single device: a ``jax.jit`` closure over the spec.  Multiple devices:
+``jax.pmap`` over the leading (device) axis — the flushed super-batch is
+split evenly across ``jax.devices()`` along the batch dimension, each
+shard solves independently (batch LP is embarrassingly parallel across
+problems), and results gather back to host order.  The scheduler
+guarantees ``b_pad % (tile * n_devices) == 0`` so every shard is a whole
+number of kernel tiles.
+
+The built callable takes host arrays ``(A (B,m,2), b (B,m), c (B,2),
+mv (B,))`` already padded to the spec's shapes and returns numpy
+``(x (B,2), feasible (B,) bool)`` — host-side because the scheduler
+scatters the rows straight into per-request futures.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.lp import LPBatch, normalize_batch
+from repro.core.seidel import solve_naive, solve_rgb
+from repro.kernels.batch_lp import rgb_pallas
+from repro.kernels.ops import pack_constraints
+from repro.serve_lp.buckets import ExecSpec
+
+
+def _make_solve(spec: ExecSpec) -> Callable:
+    """The per-shard solve as a pure jax function of dense arrays."""
+
+    def solve(A, b, c, mv):
+        batch = LPBatch(A=A, b=b, c=c, m_valid=mv)
+        if spec.normalize:
+            batch = normalize_batch(batch)
+        if spec.method == "kernel":
+            L, cc, mvv = pack_constraints(batch, m_pad=spec.bucket_m)
+            x, feas = rgb_pallas(L, cc, mvv, M=spec.M, tile=spec.tile,
+                                 chunk=spec.chunk,
+                                 interpret=spec.interpret)
+            return x, feas[:, 0].astype(bool)
+        if spec.method == "naive":
+            sol = solve_naive(batch, M=spec.M)
+        elif spec.method == "rgb":
+            sol = solve_rgb(batch, M=spec.M, tile=spec.tile,
+                            chunk=spec.chunk)
+        else:
+            raise ValueError(f"unknown method {spec.method!r}")
+        return sol.x, sol.feasible
+
+    return solve
+
+
+def build_executable(
+    spec: ExecSpec,
+    devices: Optional[Sequence[jax.Device]] = None,
+) -> Callable:
+    """Compile-on-first-call solver for one spec.  ``devices`` defaults to
+    ``jax.devices()``; a single device falls back to plain jit."""
+    devices = list(devices) if devices is not None else jax.devices()
+    if len(devices) != spec.n_devices:
+        raise ValueError(
+            f"spec.n_devices={spec.n_devices} != len(devices)="
+            f"{len(devices)}")
+    solve = _make_solve(spec)
+    D = spec.n_devices
+
+    if D == 1:
+        jitted = jax.jit(solve)
+
+        def run(A, b, c, mv):
+            x, feas = jitted(A, b, c, mv)
+            return np.asarray(x), np.asarray(feas)
+
+        return run
+
+    pmapped = jax.pmap(solve, devices=devices)
+    per = spec.b_pad // D
+
+    def shard(a):
+        return a.reshape((D, per) + a.shape[1:])
+
+    def run(A, b, c, mv):
+        x, feas = pmapped(shard(A), shard(b), shard(c), shard(mv))
+        return (np.asarray(x).reshape(spec.b_pad, 2),
+                np.asarray(feas).reshape(spec.b_pad))
+
+    return run

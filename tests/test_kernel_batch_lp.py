@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (infeasible_lp, normalize_batch, ragged_feasible_lp,
                         random_feasible_lp, shuffle_batch, solve_batch_lp)
@@ -63,11 +63,26 @@ def test_kernel_tile_sizes(tile):
 
 
 def test_pick_tile_vmem_budget():
-    # T * 4 * m_pad * 4B must stay within the default 8MB budget
+    # The full working set (constraints + c/mv inputs + x/feas outputs)
+    # must stay within the default 8MB budget
     for m_pad in (128, 1024, 8192, 65536):
         t = _pick_tile(m_pad)
         assert t >= 8 and t % 8 == 0
-        assert t * 4 * m_pad * 4 <= 8 * 1024 * 1024 or t == 8
+        assert t * (4 * m_pad + 6) * 4 <= 8 * 1024 * 1024 or t == 8
+
+
+def test_pick_tile_pinned():
+    # Pin chosen tiles for representative (B, m_pad) pairs so VMEM-model
+    # changes are deliberate, not accidental.
+    assert _pick_tile(128) == 128
+    assert _pick_tile(512) == 128
+    assert _pick_tile(8192) == 56
+    assert _pick_tile(65536) == 8      # floor: minimum viable tile
+    # batch clamp: small batches get small tiles (multiple of 8 >= B)
+    assert _pick_tile(128, 20) == 24
+    assert _pick_tile(128, 4) == 8
+    assert _pick_tile(128, 1000) == 128
+    assert _pick_tile(8192, 48) == 48
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,307 @@
+"""Serving subsystem tests: bucketing math, flush policies, executable
+cache accounting, round-trip equivalence with the direct solvers, and
+multi-device sharding (out-of-process)."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (concat_batches, make_batch, pad_batch_dim,
+                        ragged_feasible_lp, solve_batch_lp, split_batch)
+from repro.kernels import ops
+from repro.serve_lp import (BatchScheduler, ExecSpec, ServeMetrics,
+                            bucket_batch, bucket_m, shape_ladder)
+from repro.serve_lp.bench import BenchConfig, make_request, run_traffic
+
+
+def _mixed_requests(seed=0, ms=(3, 8, 37, 128, 130, 200), reps=2):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(reps):
+        for m in ms:
+            xstar = rng.uniform(-10, 10, 2)
+            theta = rng.uniform(0, 2 * np.pi, m)
+            A = np.stack([np.cos(theta), np.sin(theta)], -1)
+            b = A @ xstar + rng.uniform(0.1, 3.0, m)
+            phi = rng.uniform(0, 2 * np.pi)
+            c = np.array([np.cos(phi), np.sin(phi)])
+            reqs.append((A.astype(np.float32), b.astype(np.float32),
+                         c.astype(np.float32)))
+    return reqs
+
+
+# -- bucketing -----------------------------------------------------------
+
+def test_bucket_m_ladder():
+    assert bucket_m(1) == 128
+    assert bucket_m(128) == 128
+    assert bucket_m(129) == 256
+    assert bucket_m(700) == 1024
+    assert bucket_m(1024) == 1024
+    assert shape_ladder(1000) == [128, 256, 512, 1024]
+    # dense solvers use a finer base so tiny LPs are not padded 16x
+    assert bucket_m(3, base=8) == 8
+    assert bucket_m(9, base=8) == 16
+    assert bucket_m(130, base=8) == 256
+    with pytest.raises(ValueError):
+        bucket_m(0)
+
+
+def test_scheduler_bucket_base_by_method():
+    assert BatchScheduler(method="rgb").bucket_base == 8
+    assert BatchScheduler(method="naive").bucket_base == 8
+    assert BatchScheduler(method="kernel").bucket_base == 128
+
+
+def test_bucket_batch_ladder():
+    assert bucket_batch(1, 32) == 32
+    assert bucket_batch(32, 32) == 32
+    assert bucket_batch(33, 32) == 64
+    assert bucket_batch(100, 32) == 128
+
+
+def test_exec_spec_validation():
+    # only the kernel has a LANE-layout requirement
+    with pytest.raises(ValueError):
+        ExecSpec(bucket_m=100, b_pad=32, method="kernel", tile=32, chunk=0)
+    ExecSpec(bucket_m=16, b_pad=32, method="rgb", tile=32, chunk=0)
+    with pytest.raises(ValueError):
+        ExecSpec(bucket_m=128, b_pad=33, method="rgb", tile=32, chunk=0)
+
+
+# -- core batch utilities ------------------------------------------------
+
+def test_concat_split_roundtrip():
+    b1 = ragged_feasible_lp(jax.random.key(0), 5, 20)
+    b2 = ragged_feasible_lp(jax.random.key(1), 3, 50)
+    fused = concat_batches([b1, b2])
+    assert fused.batch == 8 and fused.m == 50
+    back1, back2 = split_batch(fused, [5, 3])
+    np.testing.assert_array_equal(np.asarray(back1.A[:, :20]),
+                                  np.asarray(b1.A))
+    np.testing.assert_array_equal(np.asarray(back2.A), np.asarray(b2.A))
+    np.testing.assert_array_equal(np.asarray(back1.m_valid),
+                                  np.asarray(b1.m_valid))
+    # padding rows of the shorter member are neutral
+    assert np.all(np.asarray(back1.A[:, 20:]) == 0.0)
+    assert np.all(np.asarray(back1.b[:, 20:]) == 1.0)
+
+
+def test_pad_batch_dim_neutral():
+    b = ragged_feasible_lp(jax.random.key(2), 3, 10)
+    p = pad_batch_dim(b, 8)
+    assert p.batch == 8
+    assert np.all(np.asarray(p.m_valid[3:]) == 0)
+    sol = solve_batch_lp(p, method="rgb")
+    direct = solve_batch_lp(b, method="rgb")
+    np.testing.assert_array_equal(np.asarray(sol.x[:3]),
+                                  np.asarray(direct.x))
+
+
+def test_pack_constraints_bucketed():
+    b = ragged_feasible_lp(jax.random.key(3), 4, 30)
+    L, c, mv = ops.pack_constraints(b, m_pad=256)
+    assert L.shape == (4, 4, 256)
+    with pytest.raises(ValueError):
+        ops.pack_constraints(b, m_pad=100)  # not a LANE multiple
+    with pytest.raises(ValueError):
+        ops.pack_constraints(b, m_pad=0)
+
+
+# -- flush policies ------------------------------------------------------
+
+def test_size_triggered_flush():
+    sched = BatchScheduler(max_batch=4, tile=8)
+    reqs = _mixed_requests(ms=(9, 10, 11, 12), reps=1)  # one bucket (16)
+    futs = [sched.submit(*r) for r in reqs]
+    # 4th submit hit max_batch: solved inline, no flush()/thread needed
+    assert all(f.done() for f in futs)
+    assert sched.pending() == 0
+    assert sched.metrics.flush_reasons == {"size": 1}
+
+
+def test_wait_triggered_flush():
+    with BatchScheduler(max_batch=1000, max_wait_s=0.02, tile=8) as sched:
+        futs = [sched.submit(*r) for r in
+                _mixed_requests(ms=(5, 200), reps=1)]
+        deadline = time.time() + 5.0
+        while not all(f.done() for f in futs):
+            assert time.time() < deadline, "wait-trigger never flushed"
+            time.sleep(0.01)
+        assert sched.metrics.flush_reasons.get("wait", 0) >= 1
+
+
+def test_manual_flush_and_pending():
+    sched = BatchScheduler(max_batch=1000, tile=8)
+    futs = [sched.submit(*r) for r in _mixed_requests(reps=1)]
+    assert sched.pending() == len(futs)
+    n = sched.flush()
+    assert n == len(futs)
+    assert all(f.done() for f in futs)
+
+
+# -- round trips ---------------------------------------------------------
+
+def test_roundtrip_bit_identical_rgb():
+    """Mixed-shape requests through the scheduler give bit-identical
+    results to direct solve_batch_lp per request (same method/tile)."""
+    sched = BatchScheduler(method="rgb", max_batch=1000, tile=32)
+    reqs = _mixed_requests()
+    futs = [sched.submit(*r) for r in reqs]
+    sched.flush()
+    for (A, b, c), f in zip(reqs, futs):
+        r = f.result(timeout=60.0)
+        direct = solve_batch_lp(make_batch(A, b, c), method="rgb",
+                                tile=32)
+        assert bool(direct.feasible[0]) == r.feasible
+        np.testing.assert_array_equal(np.asarray(direct.x[0]), r.x)
+
+
+def test_roundtrip_kernel_interpret():
+    sched = BatchScheduler(method="kernel", max_batch=1000, tile=32,
+                           interpret=True)
+    reqs = _mixed_requests(ms=(5, 40), reps=2)
+    futs = [sched.submit(*r) for r in reqs]
+    sched.flush()
+    for (A, b, c), f in zip(reqs, futs):
+        r = f.result(timeout=120.0)
+        direct = solve_batch_lp(make_batch(A, b, c), method="kernel",
+                                interpret=True)
+        assert bool(direct.feasible[0]) == r.feasible
+        np.testing.assert_allclose(np.asarray(direct.x[0]), r.x,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_infeasible_and_degenerate_roundtrip():
+    sched = BatchScheduler(max_batch=1000, tile=8)
+    rng = np.random.default_rng(7)
+    theta = rng.uniform(0, 2 * np.pi, 6)
+    A = np.stack([np.cos(theta), np.sin(theta)], -1).astype(np.float32)
+    xstar = rng.uniform(-5, 5, 2)
+    degenerate = (A, (A @ xstar).astype(np.float32),
+                  np.array([1.0, 0.0], np.float32))
+    infeasible = (np.array([[1.0, 0.0], [-1.0, 0.0]], np.float32),
+                  np.array([-1.0, -1.0], np.float32),
+                  np.array([1.0, 0.0], np.float32))
+    fd = sched.submit(*degenerate)
+    fi = sched.submit(*infeasible)
+    sched.flush()
+    assert fd.result().feasible
+    np.testing.assert_allclose(fd.result().x, xstar, rtol=1e-4,
+                               atol=1e-4)
+    assert not fi.result().feasible
+
+
+# -- executable cache ----------------------------------------------------
+
+def test_cache_hit_accounting():
+    sched = BatchScheduler(max_batch=8, tile=8)
+    # all in one m-bucket (16) so each round is exactly one flush
+    reqs = _mixed_requests(ms=(9, 10, 11, 12, 13, 14, 15, 16), reps=1)
+    for round_ in range(3):
+        for r in reqs:
+            sched.submit(*r)  # 8th submit size-flushes each round
+    assert sched.pending() == 0
+    stats = sched.cache.stats()
+    # identical traffic -> one spec: 1 miss, then hits
+    assert stats["misses"] == 1 and stats["size"] == 1
+    assert stats["hits"] == 2
+    # a new shape bucket is a new executable
+    big = _mixed_requests(ms=(200,) * 8, reps=1)
+    for r in big:
+        sched.submit(*r)
+    stats = sched.cache.stats()
+    assert stats["misses"] == 2 and stats["size"] == 2
+    assert stats["hit_rate"] == pytest.approx(2 / 4)
+
+
+def test_solver_error_propagates_to_futures():
+    sched = BatchScheduler(method="bogus", max_batch=1000, tile=8)
+    f = sched.submit(*_mixed_requests(ms=(5,), reps=1)[0])
+    with pytest.raises(ValueError):
+        sched.flush()
+    assert isinstance(f.exception(timeout=1.0), ValueError)
+
+
+def test_timer_thread_survives_solver_error():
+    """A failing wait-triggered flush must not kill the flush thread:
+    later requests still get flushed (and their futures resolved)."""
+    sched = BatchScheduler(method="bogus", max_batch=1000,
+                           max_wait_s=0.01, tile=8)
+    sched.start()
+    try:
+        req = _mixed_requests(ms=(5,), reps=1)[0]
+        f1 = sched.submit(*req)
+        assert isinstance(f1.exception(timeout=5.0), ValueError)
+        f2 = sched.submit(*req)  # thread must still be alive to flush
+        assert isinstance(f2.exception(timeout=5.0), ValueError)
+    finally:
+        sched._stop.set()
+        sched._thread.join()
+        sched._thread = None
+
+
+# -- metrics -------------------------------------------------------------
+
+def test_metrics_percentiles():
+    m = ServeMetrics()
+    for v in range(1, 101):
+        m.record_latency(v / 1000.0)
+    assert m.percentile(50) == pytest.approx(0.0505)
+    assert m.percentile(99) == pytest.approx(0.09901)
+    m.record_flush(n_real=3, b_pad=8, bucket_m=128, sum_m=30,
+                   solve_seconds=0.01, reason="manual")
+    s = m.snapshot()
+    assert s["padding_waste_problems"] == pytest.approx(5 / 8)
+    assert s["padding_waste_cells"] == pytest.approx(1 - 30 / (8 * 128))
+
+
+def test_bench_traffic_deterministic():
+    a = make_request(BenchConfig(seed=3), 5)
+    b = make_request(BenchConfig(seed=3), 5)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    assert a[3] == b[3]
+
+
+def test_bench_smoke_tiny():
+    cfg = BenchConfig(requests=24, rate=1e6, m_max=64, max_batch=8,
+                      max_wait_s=0.005, tile=8, check=3, warmup=False)
+    snap, sched = run_traffic(cfg, quiet=True)
+    assert snap["n_solved"] == 24
+    assert snap["cache"]["misses"] >= 1
+    assert 0.0 <= snap["padding_waste_cells"] < 1.0
+    assert np.isfinite(snap["latency_p99_ms"])
+
+
+# -- multi-device sharding (out-of-process, forced host devices) ---------
+
+def test_sharded_matches_single_device(multidevice):
+    code = """
+import jax, numpy as np
+from repro.core import make_batch, solve_batch_lp
+from repro.serve_lp import BatchScheduler
+assert len(jax.devices()) == 4
+rng = np.random.default_rng(0)
+reqs = []
+for m in (3, 8, 40, 130) * 4:
+    theta = rng.uniform(0, 2 * np.pi, m)
+    A = np.stack([np.cos(theta), np.sin(theta)], -1).astype(np.float32)
+    b = (A @ rng.uniform(-5, 5, 2) + rng.uniform(0.1, 2, m)).astype(
+        np.float32)
+    c = np.array([1.0, 0.5], np.float32)
+    reqs.append((A, b, c))
+sched = BatchScheduler(method="rgb", max_batch=1000, tile=8)
+futs = [sched.submit(*r) for r in reqs]
+sched.flush()
+for (A, b, c), f in zip(reqs, futs):
+    r = f.result(timeout=60.0)
+    d = solve_batch_lp(make_batch(A, b, c), method="rgb", tile=8)
+    assert bool(d.feasible[0]) == r.feasible
+    np.testing.assert_allclose(np.asarray(d.x[0]), r.x, rtol=1e-5,
+                               atol=1e-5)
+print("sharded-ok", len(reqs))
+"""
+    out = multidevice(code, n_devices=4)
+    assert "sharded-ok 16" in out
