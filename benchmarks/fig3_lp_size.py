@@ -13,8 +13,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import (normalize_batch, random_feasible_lp, shuffle_batch,
-                        solve_batch_lp)
+from repro.core import normalize_batch, random_feasible_lp, shuffle_batch
+from repro.solver import SolverSpec
 
 BATCHES = (128, 2048)
 SIZES = (8, 32, 128, 512, 2048)
@@ -45,10 +45,11 @@ def run(full: bool = False):
             lp = shuffle_batch(jax.random.key(1), normalize_batch(
                 random_feasible_lp(jax.random.key(B + m), B, m)))
             for method in ("naive", "rgb", "kernel"):
-                f = jax.jit(lambda L, meth=method: solve_batch_lp(
-                    L, method=meth, normalize=False,
-                    interpret=(meth == "kernel")))
-                dt = time_fn(f, lp)
+                solver = SolverSpec(
+                    backend=method, normalize=False,
+                    interpret=True if method == "kernel" else None,
+                ).build()
+                dt = time_fn(solver.solve, lp)
                 rows.append(emit(f"fig3/b{B}/m{m}/{method}", dt,
                                  f"per_lp_us={dt/B*1e6:.2f}"))
             dt = scipy_batch(lp)

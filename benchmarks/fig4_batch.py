@@ -8,8 +8,8 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import emit, time_fn
-from repro.core import (normalize_batch, random_feasible_lp, shuffle_batch,
-                        solve_batch_lp)
+from repro.core import normalize_batch, random_feasible_lp, shuffle_batch
+from repro.solver import SolverSpec
 from benchmarks.fig3_lp_size import scipy_batch
 
 SIZES = (64,)
@@ -24,9 +24,9 @@ def run(full: bool = False):
             lp = shuffle_batch(jax.random.key(2), normalize_batch(
                 random_feasible_lp(jax.random.key(B * 7 + m), B, m)))
             for method in ("naive", "rgb"):
-                f = jax.jit(lambda L, meth=method: solve_batch_lp(
-                    L, method=meth, normalize=False))
-                dt = time_fn(f, lp)
+                solver = SolverSpec(backend=method,
+                                    normalize=False).build()
+                dt = time_fn(solver.solve, lp)
                 rows.append(emit(f"fig4/m{m}/b{B}/{method}", dt,
                                  f"per_lp_us={dt/B*1e6:.2f}"))
             if B <= 1024 or full:

@@ -6,14 +6,13 @@ solve itself.  Reproduces the claim that as batch grows, transfer takes
 an increasing share of end-to-end time (their bright-yellow region)."""
 from __future__ import annotations
 
-import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import (normalize_batch, random_feasible_lp, shuffle_batch,
-                        solve_batch_lp)
+from repro.core import normalize_batch, random_feasible_lp, shuffle_batch
+from repro.solver import SolverSpec
 
 
 def run(full: bool = False):
@@ -32,9 +31,8 @@ def run(full: bool = False):
                     jax.device_put(hostc))
 
         t_x = time_fn(transfer, iters=5)
-        f = jax.jit(lambda L: solve_batch_lp(L, method="rgb",
-                                             normalize=False))
-        t_c = time_fn(f, lp)
+        solver = SolverSpec(backend="rgb", normalize=False).build()
+        t_c = time_fn(solver.solve, lp)
         frac = t_x / (t_x + t_c)
         rows.append(emit(f"fig5/b{B}/m{m}", t_x + t_c,
                          f"transfer_frac={frac:.3f}"))

@@ -11,15 +11,19 @@ import jax
 
 from benchmarks.common import emit, time_fn
 from repro.core import (adversarial_lp, normalize_batch,
-                        random_feasible_lp, shuffle_batch, solve_batch_lp)
+                        random_feasible_lp, shuffle_batch)
+from repro.solver import SolverSpec
 
 
 VARIANTS = (
-    # (label, solver kwargs) — block-size/chunk tuning (paper section 5:
+    # Block-size/chunk tuning as a SolverSpec sweep (paper section 5:
     # "tailoring block sizes to the expected LP size")
-    ("rgb-t32", dict(tile=32, chunk=0)),        # paper-faithful warp tile
-    ("rgb-t32-c64", dict(tile=32, chunk=64)),   # + chunked re-solve
-    ("rgb-t8-c64", dict(tile=8, chunk=64)),     # + small cooperative tile
+    ("rgb-t32", SolverSpec(backend="rgb", tile=32, chunk=0,
+                           normalize=False)),   # paper-faithful warp tile
+    ("rgb-t32-c64", SolverSpec(backend="rgb", tile=32, chunk=64,
+                               normalize=False)),  # + chunked re-solve
+    ("rgb-t8-c64", SolverSpec(backend="rgb", tile=8, chunk=64,
+                              normalize=False)),  # + small tile
 )
 
 
@@ -30,24 +34,21 @@ def run(full: bool = False):
     for m in sizes:
         lp = shuffle_batch(jax.random.key(4), normalize_batch(
             random_feasible_lp(jax.random.key(m), B, m)))
-        f = jax.jit(lambda L: solve_batch_lp(L, method="naive",
-                                             normalize=False))
-        t_naive = time_fn(f, lp)
+        naive = SolverSpec(backend="naive", normalize=False).build()
+        t_naive = time_fn(naive.solve, lp)
         rows.append(emit(f"fig7/b{B}/m{m}/naive", t_naive, ""))
-        for label, kw in VARIANTS:
-            f = jax.jit(lambda L, kw=kw: solve_batch_lp(
-                L, method="rgb", normalize=False, **kw))
-            t = time_fn(f, lp)
+        for label, spec in VARIANTS:
+            t = time_fn(spec.build().solve, lp)
             rows.append(emit(f"fig7/b{B}/m{m}/{label}", t,
                              f"over_naive={t_naive/t:.2f}x"))
 
     # randomisation ablation (Seidel's expected-O(m) claim)
     m = 512 if full else 128
     adv = normalize_batch(adversarial_lp(256, m))
-    f = jax.jit(lambda L: solve_batch_lp(L, method="rgb", normalize=False))
-    t_adv = time_fn(f, adv)
+    solver = SolverSpec(backend="rgb", normalize=False).build()
+    t_adv = time_fn(solver.solve, adv)
     shuf = shuffle_batch(jax.random.key(0), adv)
-    t_shuf = time_fn(f, shuf)
+    t_shuf = time_fn(solver.solve, shuf)
     rows.append(emit(f"fig7/adversarial/m{m}", t_shuf,
                      f"shuffle_speedup={t_adv/t_shuf:.2f}x"))
     return rows

@@ -22,7 +22,6 @@ Run AFTER the baseline sweep (shares dryrun.json):
 from repro.launch.dryrun import dryrun_cell, RESULTS_DIR  # noqa: E402
 
 import json
-from pathlib import Path
 
 CELLS = [
     ("granite-8b", "train_4k", "vma-transpose", {"check_rep": True}),

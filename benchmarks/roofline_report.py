@@ -23,7 +23,6 @@ def main():
     recs = [r for r in all_recs
             if r.get("variant", "baseline") == "baseline"]
     single = [r for r in recs if not r.get("multi_pod")]
-    multi = [r for r in recs if r.get("multi_pod")]
 
     print("### Dry-run status (all cells must compile)\n")
     print("| arch | shape | 16x16 | 2x16x16 | compile_s (1pod/2pod) |")

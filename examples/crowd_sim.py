@@ -24,13 +24,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LPBatch, solve_batch_lp
+from repro.core import LPBatch
 from repro.serve_lp import BatchScheduler
+from repro.solver import SolverSpec
 
 RADIUS = 0.3     # agent radius
 V_MAX = 1.5      # speed box (the solver's M bound)
 TAU = 2.0        # avoidance horizon
 K_NEIGH = 8      # constraints per agent (nearest neighbours)
+
+# One spec for both paths: the direct fused solve and the scheduler
+# solve share it, so their trajectories match by construction.
+SPEC = SolverSpec(backend="rgb", tile=8, chunk=64, M=V_MAX)
+_SOLVER = SPEC.build()
 
 
 def step_constraints(pos, vel_pref):
@@ -66,7 +72,7 @@ def apply_velocities(pos, x, feasible):
 def sim_step(pos, goal):
     vel_pref = goal - pos
     lp = step_constraints(pos, vel_pref)
-    sol = solve_batch_lp(lp, M=V_MAX, tile=8, chunk=64)
+    sol = _SOLVER(lp)  # composable __call__ inside the jitted step
     # infeasible (overcrowded) agents stop for a step
     v = jnp.where(sol.feasible[:, None], sol.x, 0.0)
     speed = jnp.linalg.norm(v, axis=-1, keepdims=True)
@@ -120,10 +126,8 @@ def main():
                           ).astype(np.float32)
     sched = None
     if not args.direct:
-        # M must match the direct path's speed box; normalize=True matches
-        # solve_batch_lp's default.
-        sched = BatchScheduler(method="rgb", max_batch=N, tile=8,
-                               chunk=64, M=V_MAX)
+        # The scheduler solves with the exact spec the direct path uses.
+        sched = BatchScheduler(SPEC, max_batch=N)
 
     min_gap = np.inf
     for t in range(args.steps):

@@ -1,4 +1,4 @@
-"""Quickstart: solve a batch of 2-D LPs three ways and compare.
+"""Quickstart: one batch of 2-D LPs, every backend, one spec sweep.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,33 +7,35 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (normalize_batch, random_feasible_lp, shuffle_batch,
-                        solve_batch_lp)
+from repro.core import random_feasible_lp
+from repro.solver import SolverSpec
 
 
 def main():
     B, m = 4096, 128
     print(f"batch of {B} LPs with {m} constraints each")
     lp = random_feasible_lp(jax.random.key(0), B, m)
-    # normalise once, pick a random consideration order (Seidel's R)
-    lp = shuffle_batch(jax.random.key(1), normalize_batch(lp))
+
+    # One frozen spec per backend; shuffle=True applies Seidel's random
+    # consideration order (keyed by seed) inside every solve.
+    sweep = (
+        SolverSpec(backend="naive", shuffle=True, seed=1),
+        SolverSpec(backend="rgb", tile=8, chunk=64, shuffle=True, seed=1),
+        SolverSpec(backend="kernel", interpret=True, shuffle=True,
+                   seed=1),                      # Pallas kernel (CPU
+    )                                            # interpret mode here)
 
     sols = {}
-    for method, kw in (
-        ("naive", {}),                          # divergence baseline
-        ("rgb", dict(tile=8, chunk=64)),        # cooperative tiles
-        ("kernel", dict(interpret=True)),       # Pallas TPU kernel (CPU
-    ):                                          # interpret mode here)
-        f = jax.jit(lambda L, meth=method, kw=kw: solve_batch_lp(
-            L, method=meth, normalize=False, **kw))
-        out = f(lp)
+    for spec in sweep:
+        solver = spec.build()
+        out = solver.solve(lp)                   # compiles once per shape
         jax.block_until_ready(out.x)
         t0 = time.perf_counter()
-        out = f(lp)
+        out = solver.solve(lp)                   # cache hit
         jax.block_until_ready(out.x)
         dt = time.perf_counter() - t0
-        sols[method] = out
-        print(f"  {method:8s}: {dt*1e3:8.1f} ms "
+        sols[spec.backend] = out
+        print(f"  {spec.backend:8s}: {dt*1e3:8.1f} ms "
               f"({dt/B*1e6:6.2f} us/LP), "
               f"{int(out.feasible.sum())}/{B} feasible")
 
@@ -41,7 +43,7 @@ def main():
         np.testing.assert_allclose(np.asarray(sols["naive"].objective),
                                    np.asarray(sols[k].objective),
                                    rtol=5e-4, atol=5e-4)
-    print("all methods agree to 5 significant figures "
+    print("all backends agree to 5 significant figures "
           "(the paper's comparison tolerance)")
 
 

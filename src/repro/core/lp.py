@@ -11,7 +11,6 @@ by the 1-D re-solve (its normal has zero norm).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,8 +50,13 @@ class LPSolution:
 
 def make_batch(A, b, c, m_valid=None) -> LPBatch:
     A = jnp.asarray(A)
-    b = jnp.asarray(b)
-    c = jnp.asarray(c)
+    if not jnp.issubdtype(A.dtype, jnp.floating):
+        A = A.astype(jnp.float32)
+    # One dtype for the whole problem: mixed inputs (e.g. a float64 b
+    # against a float32 A) used to flow through silently and blow up
+    # later in pad/normalize concatenations or solver promotion.
+    b = jnp.asarray(b, A.dtype)
+    c = jnp.asarray(c, A.dtype)
     if A.ndim == 2:  # single problem -> batch of one
         A, b, c = A[None], b[None], c[None]
     B, m = A.shape[0], A.shape[1]
@@ -123,12 +127,23 @@ def concat_batches(batches: list[LPBatch]) -> LPBatch:
     )
 
 
-def split_batch(batch: LPBatch, sizes: list[int]) -> list[LPBatch]:
+def split_batch(batch: LPBatch, sizes: list[int],
+                *, allow_remainder: bool = False) -> list[LPBatch]:
     """Inverse of :func:`concat_batches`: slice the batch dimension back
-    into consecutive pieces of the given sizes (padding rows kept)."""
-    if sum(sizes) > batch.batch:
+    into consecutive pieces of the given sizes (padding rows kept).
+
+    ``sizes`` must cover the batch exactly — a shortfall used to drop
+    the trailing problems silently; now it raises unless
+    ``allow_remainder=True`` is passed explicitly (the remainder is then
+    discarded, e.g. to strip padding problems off a fused flush)."""
+    total = sum(sizes)
+    if total > batch.batch:
         raise ValueError(
             f"split sizes {sizes} exceed batch {batch.batch}")
+    if total < batch.batch and not allow_remainder:
+        raise ValueError(
+            f"split sizes {sizes} sum to {total} < batch {batch.batch}; "
+            "pass allow_remainder=True to drop the trailing problems")
     out, lo = [], 0
     for s in sizes:
         out.append(LPBatch(A=batch.A[lo:lo + s], b=batch.b[lo:lo + s],

@@ -25,13 +25,14 @@ The Pallas TPU kernel (kernels/batch_lp.py) implements the same algorithm as
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import oneD
-from repro.core.lp import LPBatch, LPSolution, normalize_batch, shuffle_batch
+from repro.core.lp import LPBatch, LPSolution
 
 DEFAULT_M = 1.0e4  # box bound; "very large so as not to affect the optimum"
 
@@ -196,8 +197,11 @@ def solve_rgb(batch: LPBatch, *, M: float = DEFAULT_M,
 
 
 # ---------------------------------------------------------------------------
-# Public entry point
+# Deprecated public entry point (shim over repro.solver)
 # ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED = False
+
 
 def solve_batch_lp(
     batch: LPBatch,
@@ -210,25 +214,29 @@ def solve_batch_lp(
     normalize: bool = True,
     interpret: Optional[bool] = None,
 ) -> LPSolution:
-    """Solve a batch of 2-D LPs.
+    """Deprecated: build a :class:`repro.solver.SolverSpec` instead.
 
-    method: "naive" (divergent baseline), "rgb" (pure-JAX cooperative
-    solver) or "kernel" (Pallas TPU kernel; ``interpret=True`` runs the
-    kernel body on CPU).  ``key`` enables Seidel's randomised constraint
-    order — strongly recommended (expected O(m) instead of worst-case
-    O(m^2) re-solve work).
+    This shim maps the historical ``method=`` kwargs onto an equivalent
+    spec and delegates to its process-cached
+    :class:`~repro.solver.solver.Solver`, so results are identical to
+    ``SolverSpec(...).build().solve(batch, key=key)``.  One
+    DeprecationWarning is emitted per process.  Quirk preserved for
+    compatibility: ``method="kernel"`` ignores ``tile``/``chunk`` (the
+    kernel picks a VMEM-budgeted tile), exactly as before.
     """
-    if normalize:
-        batch = normalize_batch(batch)
-    if key is not None:
-        batch = shuffle_batch(key, batch)
-    if method == "naive":
-        return solve_naive(batch, M=M)
-    if method == "rgb":
-        return solve_rgb(batch, M=M, tile=tile, chunk=chunk)
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            "core.solve_batch_lp(method=...) is deprecated; use "
+            "repro.solver.SolverSpec(backend=...).build() and call "
+            ".solve(batch) on the result", DeprecationWarning,
+            stacklevel=2)
+    from repro.solver import SolverSpec, get_solver  # lazy: import cycle
     if method == "kernel":
-        from repro.kernels import ops  # lazy: keeps core import-light
-        return ops.solve_batch_lp_kernel(
-            batch, M=M, interpret=bool(interpret) if interpret is not None
-            else jax.default_backend() == "cpu")
-    raise ValueError(f"unknown method {method!r}")
+        spec = SolverSpec(backend="kernel", M=M, normalize=normalize,
+                          interpret=interpret)
+    else:
+        spec = SolverSpec(backend=method, tile=tile, chunk=chunk, M=M,
+                          normalize=normalize, interpret=interpret)
+    return get_solver(spec).solve(batch, key=key)

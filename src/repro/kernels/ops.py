@@ -1,19 +1,25 @@
-"""Jit'd public wrappers around the Pallas RGB kernel.
+"""Layout plumbing for the Pallas RGB kernel — the *kernel backend*.
 
-Handles layout conversion (LPBatch -> packed struct-of-arrays with the
-constraint index on the lane axis), padding (batch to a tile multiple with
-neutral problems, constraints to a 128-lane multiple with neutral rows) and
-unpacking of results.
+This module is the implementation layer behind
+``SolverSpec(backend="kernel")``: it converts an ``LPBatch`` to the
+packed struct-of-arrays layout the kernel wants (constraint index on
+the 128-lane minor axis) and pads the batch dimension to a tile
+multiple with neutral problems.  The public way to run the kernel is
+``repro.solver``::
+
+    from repro.solver import SolverSpec
+    sol = SolverSpec(backend="kernel", interpret=True).build().solve(batch)
+
+``solve_batch_lp_kernel`` remains as a thin compatibility wrapper over
+that path (note its historical ``normalize=False`` default — the
+unified API defaults to True).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.lp import LPBatch, LPSolution, PAD_B, normalize_batch
-from repro.kernels.batch_lp import LANE, _pick_tile, rgb_pallas
+from repro.core.lp import LPBatch, LPSolution, PAD_B
+from repro.kernels.batch_lp import LANE
 
 
 def pack_constraints(batch: LPBatch, m_pad: int | None = None):
@@ -59,15 +65,6 @@ def _pad_batch_dim(L, c, mv, T):
     return L, c, mv, B
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("M", "tile", "chunk", "interpret"))
-def _solve_packed(L, c, mv, *, M, tile, chunk, interpret):
-    L, c, mv, B = _pad_batch_dim(L, c, mv, tile)
-    x, feas = rgb_pallas(L, c, mv, M=M, tile=tile, chunk=chunk,
-                         interpret=interpret)
-    return x[:B], feas[:B, 0]
-
-
 def solve_batch_lp_kernel(
     batch: LPBatch,
     *,
@@ -77,17 +74,12 @@ def solve_batch_lp_kernel(
     interpret: bool = False,
     normalize: bool = False,
 ) -> LPSolution:
-    """Solve an LPBatch with the Pallas kernel.  ``interpret=True`` executes
-    the kernel body in Python on CPU (how this container validates it);
-    on a TPU backend leave it False."""
-    if normalize:
-        batch = normalize_batch(batch)
-    L, c, mv = pack_constraints(batch)
-    T = tile or _pick_tile(L.shape[-1], L.shape[0])
-    x, feas = _solve_packed(L, c, mv, M=M, tile=T, chunk=chunk,
-                            interpret=interpret)
-    return LPSolution(
-        x=x,
-        feasible=feas.astype(bool),
-        objective=jnp.einsum("bd,bd->b", batch.c.astype(x.dtype), x),
-    )
+    """Compatibility wrapper: solve an LPBatch with the Pallas kernel.
+
+    Equivalent to ``SolverSpec(backend="kernel", ...)`` with this
+    module's historical defaults (``normalize=False``,
+    ``interpret=False``); prefer building that spec directly."""
+    from repro.solver import SolverSpec, get_solver
+    spec = SolverSpec(backend="kernel", tile=tile, chunk=chunk, M=M,
+                      normalize=normalize, interpret=bool(interpret))
+    return get_solver(spec).solve(batch)

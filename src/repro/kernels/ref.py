@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.lp import LPBatch, normalize_batch
+from repro.core.lp import LPBatch
 from repro.core.seidel import solve_rgb
 
 

@@ -15,7 +15,6 @@ jax.grad for training.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

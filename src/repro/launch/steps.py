@@ -8,7 +8,6 @@ error-feedback gradient compression across pods)."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -21,8 +20,7 @@ from repro.launch.mesh import batch_axes, mesh_info
 from repro.models.common import ModelConfig
 from repro.models.transformer import build_model
 from repro.optim import (AdamW, apply_updates, compressed_psum,
-                         init_error_state, lp_constrain_updates,
-                         sync_duplicated_grads)
+                         lp_constrain_updates, sync_duplicated_grads)
 
 
 def _named(mesh, spec_tree):

@@ -12,12 +12,9 @@ resume, heartbeat + straggler monitoring.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.configs import ARCHS, smoke_config
 from repro.data.pipeline import TokenSource, for_model

@@ -15,7 +15,6 @@ scheme for archs whose head counts don't divide the TP degree (DESIGN.md):
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Sequence, Tuple
 
 

@@ -19,8 +19,6 @@ cfg.remat.  FSDP leaves are all-gathered per layer inside the scan body
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -1129,7 +1127,6 @@ class EncDecLM(BaseModel):
         emb = L.gather_fsdp({"emb": params["emb"]},
                             {"emb": self.top_plan()["emb"]}, mi)["emb"]
         h = L.embed_lookup(emb, batch["token"], mi)
-        B = h.shape[0]
         pos_emb = L.sinusoid_pos_emb(int(caches["k"].shape[2]),
                                      cfg.d_model, h.dtype)
         h = h + jnp.take(pos_emb, batch["pos"], axis=0)[:, None]

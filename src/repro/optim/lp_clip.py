@@ -12,8 +12,8 @@ For every parameter block we pose a tiny 2-D linear program over
 where u is the optimizer's proposed update, g the gradient and mu the unit
 momentum direction.  One LP per parameter block -> a *batch* of LPs with
 identical structure but different coefficients — exactly the workload
-shape the paper accelerates — solved on-device with core.solve_batch_lp
-(or the Pallas kernel on TPU).
+shape the paper accelerates — solved on-device through a
+repro.solver.SolverSpec (the Pallas kernel backend on TPU).
 
 This is deliberately lightweight (a handful of constraints per LP); its
 purpose is to exercise the paper's solver inside the training loop and to
@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lp import make_batch
-from repro.core.seidel import solve_batch_lp
+from repro.solver import SolverSpec, get_solver
 
 _EPS = 1e-12
 
@@ -82,7 +82,10 @@ def lp_constrain_updates(
     A = jnp.stack([r[0] for r in rows])  # (nb, 6, 2)
     b = jnp.stack([r[1] for r in rows])  # (nb, 6)
     c = jnp.broadcast_to(jnp.asarray([1.0, lam], jnp.float32), (nb, 2))
-    sol = solve_batch_lp(make_batch(A, b, c), method=method, M=10.0)
+    # __call__ is the composable path: lp_constrain_updates runs inside
+    # the caller's jitted train step.
+    sol = get_solver(SolverSpec(backend=method, M=10.0))(
+        make_batch(A, b, c))
     s1 = jnp.where(sol.feasible, sol.x[:, 0], 1.0)
     s2 = jnp.where(sol.feasible, sol.x[:, 1], 0.0)
 

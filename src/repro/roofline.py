@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Tuple
+from typing import Dict
 
 PEAK_FLOPS = 197e12       # bf16 per chip
 HBM_BW = 819e9            # B/s per chip
@@ -178,13 +178,11 @@ def fused_hbm_estimate(cfg, kind: str, batch: int, seq: int,
       * logits: tokens_dev x V/tp fp32, x3 for training.
       * decode: full KV-cache / SSM-state read per emitted token.
     """
-    import math
     dt = 2  # bf16
     d = cfg.d_model
     N_param = cfg.param_count()
     N_active = cfg.active_param_count()
     tokens_dev = max(batch * (seq if kind != "decode" else 1), 1) / data
-    w_dev = N_param * dt / tp
     w_active_dev = N_active * dt / tp
 
     if kind == "train":

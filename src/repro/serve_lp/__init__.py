@@ -12,17 +12,21 @@ one is visible) and scatters results to the futures in submission order.
         -> futures (per-request LPResult)
 
 Use :class:`BatchScheduler` when requests arrive one at a time (serving,
-simulation agents, RPC handlers); call :func:`repro.core.solve_batch_lp`
-directly when you already hold one uniform batch.
+simulation agents, RPC handlers); build a
+:class:`~repro.solver.SolverSpec` and call its Solver directly when you
+already hold one uniform batch.  The scheduler takes the same spec —
+``BatchScheduler(SolverSpec(...))`` — and embeds it in every flush's
+:class:`ExecSpec` cache key.
 """
 from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
                                     bucket_m, shape_ladder)
 from repro.serve_lp.metrics import ServeMetrics
 from repro.serve_lp.scheduler import BatchScheduler, LPResult
 from repro.serve_lp.sharding import build_executable
+from repro.solver import SolverSpec
 
 __all__ = [
     "BatchScheduler", "ExecSpec", "ExecutableCache", "LPResult",
-    "ServeMetrics", "bucket_batch", "bucket_m", "build_executable",
-    "shape_ladder",
+    "ServeMetrics", "SolverSpec", "bucket_batch", "bucket_m",
+    "build_executable", "shape_ladder",
 ]

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serve_lp.scheduler import BatchScheduler
+from repro.solver import SolverSpec
 
 KINDS = ("feasible", "infeasible", "degenerate")
 
@@ -136,10 +137,10 @@ def _warmup(cfg: BenchConfig, sched: BatchScheduler,
 
 def run_traffic(cfg: BenchConfig, *, quiet: bool = False
                 ) -> Tuple[Dict, BatchScheduler]:
-    sched = BatchScheduler(
-        method=cfg.method, max_batch=cfg.max_batch,
-        max_wait_s=cfg.max_wait_s, tile=cfg.tile, chunk=cfg.chunk,
-        interpret=cfg.interpret)
+    spec = SolverSpec(backend=cfg.method, tile=cfg.tile, chunk=cfg.chunk,
+                      interpret=cfg.interpret)
+    sched = BatchScheduler(spec, max_batch=cfg.max_batch,
+                           max_wait_s=cfg.max_wait_s)
     if cfg.warmup:
         _warmup(cfg, sched, quiet)
     futures: List = []
@@ -174,14 +175,15 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
 
 def _check_against_direct(cfg: BenchConfig, results: List) -> None:
     """Re-solve a deterministic subset directly and compare."""
-    from repro.core import make_batch, solve_batch_lp
+    from repro.core import make_batch
+    from repro.solver import get_solver
+    solver = get_solver(SolverSpec(backend=cfg.method, tile=cfg.tile,
+                                   chunk=cfg.chunk,
+                                   interpret=cfg.interpret))
     idxs = np.linspace(0, cfg.requests - 1, cfg.check).astype(int)
     for i in idxs:
         A, b, c, _ = make_request(cfg, int(i))
-        sol = solve_batch_lp(
-            make_batch(A, b, c), method=cfg.method, tile=cfg.tile,
-            chunk=cfg.chunk,
-            **({"interpret": True} if cfg.method == "kernel" else {}))
+        sol = solver.solve(make_batch(A, b, c))
         r = results[int(i)]
         assert bool(sol.feasible[0]) == r.feasible, (
             f"request {i}: feasible mismatch")

@@ -25,6 +25,7 @@ import threading
 from typing import Callable, Dict, List
 
 from repro.kernels.batch_lp import LANE
+from repro.solver import SolverSpec
 
 
 def bucket_m(m: int, *, base: int = LANE) -> int:
@@ -59,29 +60,53 @@ def shape_ladder(m_max: int, *, base: int = LANE) -> List[int]:
 
 @dataclasses.dataclass(frozen=True)
 class ExecSpec:
-    """Everything that determines a compiled solver executable."""
+    """Everything that determines a compiled solver executable: the
+    padded shapes, the device count and the full (resolved)
+    :class:`~repro.solver.SolverSpec`.
+
+    Embedding the whole solver spec in the cache key is deliberate —
+    two schedulers with different specs (dtype, shuffle seed, M, ...)
+    can never alias each other's executables."""
 
     bucket_m: int      # padded constraint count (LANE multiple)
     b_pad: int         # padded batch size (tile * n_devices multiple)
-    method: str        # "rgb" | "kernel" | "naive"
-    tile: int
-    chunk: int
+    solver: SolverSpec
     n_devices: int = 1
-    M: float = 1.0e4
-    normalize: bool = True
-    interpret: bool = False
 
     def __post_init__(self):
+        if not isinstance(self.solver, SolverSpec):
+            raise TypeError(
+                f"solver must be a SolverSpec, got {type(self.solver)!r}")
+        # Canonicalise so equal execution plans hash equal.
+        object.__setattr__(self, "solver", self.solver.resolve())
+        if self.solver.tile is None:
+            raise ValueError(
+                "ExecSpec needs a concrete solver.tile (b_pad is padded "
+                "to tile * n_devices multiples)")
         if self.bucket_m < 1:
             raise ValueError(f"bucket_m={self.bucket_m} < 1")
         # Only the Pallas kernel has a lane-layout requirement.
-        if self.method == "kernel" and self.bucket_m % LANE:
+        if self.solver.backend == "kernel" and self.bucket_m % LANE:
             raise ValueError(f"bucket_m={self.bucket_m} not a {LANE} "
                              "multiple")
-        if self.b_pad % (self.tile * self.n_devices):
+        if self.b_pad % (self.solver.tile * self.n_devices):
             raise ValueError(
                 f"b_pad={self.b_pad} not a multiple of tile*n_devices="
-                f"{self.tile * self.n_devices}")
+                f"{self.solver.tile * self.n_devices}")
+
+    # Convenience views kept for call sites/reporting that predate the
+    # embedded spec.
+    @property
+    def method(self) -> str:
+        return self.solver.backend
+
+    @property
+    def tile(self) -> int:
+        return self.solver.tile
+
+    @property
+    def chunk(self) -> int:
+        return self.solver.chunk
 
 
 class ExecutableCache:

@@ -27,12 +27,16 @@ import jax
 import numpy as np
 
 from repro.core.lp import PAD_A, PAD_B
-from repro.core.seidel import DEFAULT_M
 from repro.kernels.batch_lp import LANE
 from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
                                     bucket_m)
 from repro.serve_lp.metrics import ServeMetrics
 from repro.serve_lp.sharding import build_executable
+from repro.solver import SolverSpec
+
+# Serving needs a concrete tile for its b_pad ladder; specs built with
+# tile=None get this (the historical scheduler default).
+DEFAULT_SERVE_TILE = 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,10 +67,16 @@ class BatchScheduler:
 
     Parameters
     ----------
+    spec:
+        the :class:`~repro.solver.SolverSpec` every flush solves with.
+        It becomes part of each flush's :class:`ExecSpec` cache key, so
+        two schedulers with different specs can never alias
+        executables.  ``backend="auto"``/``interpret=None`` resolve
+        against the running JAX backend; ``tile=None`` gets the serving
+        default (32).
     method, tile, chunk, M, normalize, interpret:
-        forwarded into the :class:`ExecSpec` (see ``core.solve_batch_lp``
-        for their meaning).  ``interpret=None`` resolves to True on a CPU
-        backend so the Pallas kernel stays runnable in tests/CI.
+        deprecated flag-bag alternative to ``spec`` (mapped onto an
+        equivalent SolverSpec; passing both is an error).
     max_batch:
         size trigger — a bucket flushes as soon as it holds this many.
     max_wait_s:
@@ -78,44 +88,89 @@ class BatchScheduler:
 
     def __init__(
         self,
+        spec: Optional[SolverSpec] = None,
         *,
-        method: str = "rgb",
+        method: Optional[str] = None,
         max_batch: int = 256,
         max_wait_s: float = 0.005,
-        tile: int = 32,
-        chunk: int = 0,
-        M: float = DEFAULT_M,
-        normalize: bool = True,
+        tile: Optional[int] = None,
+        chunk: Optional[int] = None,
+        M: Optional[float] = None,
+        normalize: Optional[bool] = None,
         interpret: Optional[bool] = None,
         devices: Optional[Sequence] = None,
         metrics: Optional[ServeMetrics] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} < 1")
-        self.method = method
+        legacy = {k: v for k, v in dict(
+            backend=method, tile=tile, chunk=chunk, M=M,
+            normalize=normalize, interpret=interpret).items()
+            if v is not None}
+        if spec is None:
+            spec = SolverSpec(**{"backend": "rgb", **legacy})
+        elif legacy:
+            raise TypeError(
+                f"pass either spec= or legacy solver kwargs, not both "
+                f"(got {sorted(legacy)})")
+        elif not isinstance(spec, SolverSpec):
+            raise TypeError(f"spec must be a SolverSpec, got "
+                            f"{type(spec)!r}")
+        spec = spec.resolve()
+        if spec.shuffle:
+            # The spec-seeded shuffle permutes the *flushed super-batch*,
+            # so a request's constraint order would depend on its row and
+            # on b_pad — breaking the guarantee that scheduler round
+            # trips are bit-identical to direct solves with the spec.
+            raise ValueError(
+                "BatchScheduler does not support shuffle=True specs: "
+                "per-request results would depend on flush composition; "
+                "pre-shuffle requests client-side if randomised order is "
+                "needed")
+        if spec.tile is None:
+            spec = dataclasses.replace(spec, tile=DEFAULT_SERVE_TILE)
+        self.spec = spec
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
-        self.tile = tile
-        self.chunk = chunk
-        self.M = M
-        self.normalize = normalize
-        if interpret is None:
-            interpret = jax.default_backend() == "cpu"
-        self.interpret = interpret
         # Only the Pallas kernel needs LANE-multiple constraint counts;
         # the dense solvers bucket on a finer ladder so tiny LPs are not
         # padded 16x (crowd_sim submits m=8).
-        self.bucket_base = LANE if method == "kernel" else 8
+        self.bucket_base = LANE if spec.backend == "kernel" else 8
         self._devices = (list(devices) if devices is not None
                          else jax.devices())
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.cache = ExecutableCache(
-            lambda spec: build_executable(spec, self._devices))
+            lambda s: build_executable(s, self._devices))
         self._queues: Dict[int, List[_Pending]] = {}
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._closed = False
+
+    # Legacy attribute views (pre-SolverSpec callers/reporting).
+    @property
+    def method(self) -> str:
+        return self.spec.backend
+
+    @property
+    def tile(self) -> int:
+        return self.spec.tile
+
+    @property
+    def chunk(self) -> int:
+        return self.spec.chunk
+
+    @property
+    def M(self) -> float:
+        return self.spec.M
+
+    @property
+    def normalize(self) -> bool:
+        return self.spec.normalize
+
+    @property
+    def interpret(self) -> bool:
+        return self.spec.interpret
 
     @property
     def n_devices(self) -> int:
@@ -253,10 +308,8 @@ class BatchScheduler:
             b[i, :r.m] = r.b
             c[i] = r.c
             mv[i] = r.m
-        spec = ExecSpec(
-            bucket_m=bm, b_pad=b_pad, method=self.method, tile=self.tile,
-            chunk=self.chunk, n_devices=len(self._devices), M=self.M,
-            normalize=self.normalize, interpret=self.interpret)
+        spec = ExecSpec(bucket_m=bm, b_pad=b_pad, solver=self.spec,
+                        n_devices=len(self._devices))
         try:
             fn = self.cache.get(spec)
             t0 = time.perf_counter()

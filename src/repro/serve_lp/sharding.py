@@ -20,33 +20,20 @@ from typing import Callable, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core.lp import LPBatch, normalize_batch
-from repro.core.seidel import solve_naive, solve_rgb
-from repro.kernels.batch_lp import rgb_pallas
-from repro.kernels.ops import pack_constraints
+from repro.core.lp import LPBatch
 from repro.serve_lp.buckets import ExecSpec
+from repro.solver import solve_with_spec
 
 
 def _make_solve(spec: ExecSpec) -> Callable:
-    """The per-shard solve as a pure jax function of dense arrays."""
+    """The per-shard solve as a pure jax function of dense arrays —
+    the same :func:`repro.solver.solve_with_spec` core every other
+    entry point runs through, so scheduler round-trips stay
+    bit-identical to direct solves with the same spec."""
 
     def solve(A, b, c, mv):
-        batch = LPBatch(A=A, b=b, c=c, m_valid=mv)
-        if spec.normalize:
-            batch = normalize_batch(batch)
-        if spec.method == "kernel":
-            L, cc, mvv = pack_constraints(batch, m_pad=spec.bucket_m)
-            x, feas = rgb_pallas(L, cc, mvv, M=spec.M, tile=spec.tile,
-                                 chunk=spec.chunk,
-                                 interpret=spec.interpret)
-            return x, feas[:, 0].astype(bool)
-        if spec.method == "naive":
-            sol = solve_naive(batch, M=spec.M)
-        elif spec.method == "rgb":
-            sol = solve_rgb(batch, M=spec.M, tile=spec.tile,
-                            chunk=spec.chunk)
-        else:
-            raise ValueError(f"unknown method {spec.method!r}")
+        sol = solve_with_spec(spec.solver,
+                              LPBatch(A=A, b=b, c=c, m_valid=mv))
         return sol.x, sol.feasible
 
     return solve

@@ -1,0 +1,29 @@
+"""Unified front end for the batch 2-D LP solver stack.
+
+One operation, many LPs, every backend::
+
+    from repro.solver import SolverSpec
+
+    solver = SolverSpec(backend="auto", shuffle=True).build()
+    sol = solver.solve(batch)            # jit-cached per input shape
+    one = solver.solve_one(A, b, c)      # single-LP convenience
+    sol = jax.jit(solver)(batch)         # composable pure call
+
+    # same problem, every backend, bit-for-bit comparable:
+    sweep = [SolverSpec(backend=b, interpret=True if b == "kernel"
+                        else None) for b in ("naive", "rgb", "kernel")]
+    sols = [s.build().solve(batch) for s in sweep]
+
+:class:`SolverSpec` is frozen and hashable — use it directly as a
+static ``jax.jit`` argument or as an executable-cache key (the serving
+layer's ``ExecSpec`` embeds one).  ``core.solve_batch_lp`` remains as a
+deprecated shim over this module.
+"""
+from repro.solver.solver import Solver, solve_with_spec
+from repro.solver.spec import (BACKENDS, DEFAULT_M, SolverSpec,
+                               get_solver)
+
+__all__ = [
+    "BACKENDS", "DEFAULT_M", "Solver", "SolverSpec", "get_solver",
+    "solve_with_spec",
+]

@@ -1,0 +1,131 @@
+"""`Solver` — a reusable, jit-cached executor for one :class:`SolverSpec`.
+
+``spec.build()`` resolves ``"auto"`` choices against the current JAX
+backend and returns a Solver that
+
+* caches one jit-compiled callable per input shape (``solve``), so a
+  stream of same-shaped batches compiles exactly once;
+* stays composable: ``solver(batch)`` is a pure traceable function of
+  the batch, safe under an outer ``jax.jit``/``jax.vmap``;
+* offers ``solve_one(A, b, c)`` for the single-LP convenience case.
+
+``solve_with_spec`` is the underlying pure function (spec in Python,
+arrays traced).  Every layer — the ``core.solve_batch_lp`` deprecation
+shim, ``kernels.ops``, the serving executables in
+``serve_lp.sharding`` — runs through it, which is what makes "same
+problem, every backend, bit-for-bit comparable" a one-liner.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lp import (LPBatch, LPSolution, normalize_batch,
+                           shuffle_batch)
+from repro.core.seidel import solve_naive, solve_rgb
+from repro.solver.spec import RGB_DEFAULT_TILE, SolverSpec
+
+
+def solve_with_spec(spec: SolverSpec, batch: LPBatch,
+                    key=None) -> LPSolution:
+    """Solve ``batch`` per ``spec`` — the pure, trace-safe core.
+
+    ``key`` overrides the spec's shuffle policy for this call; with
+    ``key=None`` the batch is shuffled iff ``spec.shuffle`` (keyed by
+    ``spec.seed``).
+    """
+    spec = spec.resolve()
+    dt = jnp.dtype(spec.dtype)
+    # Cast each array (astype is the identity when already dt): A alone
+    # matching must not let a mixed-dtype b or c leak through.
+    batch = LPBatch(A=batch.A.astype(dt), b=batch.b.astype(dt),
+                    c=batch.c.astype(dt), m_valid=batch.m_valid)
+    if spec.normalize:
+        batch = normalize_batch(batch)
+    if key is None and spec.shuffle:
+        key = jax.random.key(spec.seed)
+    if key is not None:
+        batch = shuffle_batch(key, batch)
+    if spec.backend == "naive":
+        return solve_naive(batch, M=spec.M)
+    if spec.backend == "rgb":
+        return solve_rgb(batch, M=spec.M,
+                         tile=spec.tile or RGB_DEFAULT_TILE,
+                         chunk=spec.chunk)
+    return _solve_kernel(spec, batch)
+
+
+def _solve_kernel(spec: SolverSpec, batch: LPBatch) -> LPSolution:
+    # Deferred import: kernels.ops wraps this module for its public
+    # compatibility surface, so the dependency must point one way only.
+    from repro.kernels.batch_lp import _pick_tile, rgb_pallas
+    from repro.kernels.ops import _pad_batch_dim, pack_constraints
+
+    L, c, mv = pack_constraints(batch)
+    tile = spec.tile or _pick_tile(L.shape[-1], L.shape[0])
+    L, c, mv, B = _pad_batch_dim(L, c, mv, tile)
+    x, feas = rgb_pallas(L, c, mv, M=spec.M, tile=tile, chunk=spec.chunk,
+                         interpret=spec.interpret)
+    x, feas = x[:B], feas[:B, 0]
+    return LPSolution(
+        x=x,
+        feasible=feas.astype(bool),
+        objective=jnp.einsum("bd,bd->b", batch.c.astype(x.dtype), x),
+    )
+
+
+class Solver:
+    """Executor for one resolved :class:`SolverSpec`.
+
+    Construct via ``spec.build()`` (or :func:`~repro.solver.spec.
+    get_solver` for the process-wide cached instance).
+    """
+
+    def __init__(self, spec: SolverSpec):
+        if not isinstance(spec, SolverSpec):
+            raise TypeError(f"expected SolverSpec, got {type(spec)!r}")
+        self.spec = spec.resolve()
+        # jax.jit itself caches one compile per input shape/dtype; one
+        # persistent wrapper per calling convention is all we need.
+        # _shapes only tracks the distinct entries for introspection.
+        self._jit_plain = jax.jit(
+            lambda b: solve_with_spec(self.spec, b))
+        self._jit_keyed = jax.jit(
+            lambda b, k: solve_with_spec(self.spec, b, k))
+        self._shapes = set()
+
+    # -- composable entry point ------------------------------------------
+
+    def __call__(self, batch: LPBatch, key=None) -> LPSolution:
+        """Pure function of ``(batch, key)`` — compose freely under an
+        outer ``jax.jit`` / ``jax.vmap`` / ``jax.grad`` transform."""
+        return solve_with_spec(self.spec, batch, key)
+
+    # -- jit-cached host entry points ------------------------------------
+
+    def solve(self, batch: LPBatch, key=None) -> LPSolution:
+        """Solve one batch through the per-shape compile cache."""
+        self._shapes.add((batch.A.shape, str(batch.A.dtype),
+                          key is not None))
+        if key is None:
+            return self._jit_plain(batch)
+        return self._jit_keyed(batch, key)
+
+    def solve_one(self, A, b, c, key=None) -> LPSolution:
+        """Solve a single LP (``A (m,2)``, ``b (m,)``, ``c (2,)``);
+        returns an :class:`LPSolution` with the batch axis dropped."""
+        from repro.core.lp import make_batch
+        sol = self.solve(make_batch(A, b, c), key=key)
+        return LPSolution(x=sol.x[0], feasible=sol.feasible[0],
+                          objective=sol.objective[0])
+
+    # -- introspection ----------------------------------------------------
+
+    def cache_info(self) -> dict:
+        """Distinct (shape, dtype, keyed) entries solved so far — each
+        cost exactly one compile in the underlying jit caches."""
+        return {"n_entries": len(self._shapes),
+                "shapes": sorted(str(k) for k in self._shapes)}
+
+    def __repr__(self) -> str:
+        return f"Solver({self.spec!r})"

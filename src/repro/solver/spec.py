@@ -1,0 +1,180 @@
+"""`SolverSpec` — the one frozen, hashable description of *how* to solve.
+
+Every public entry point used to carry its own loose bag of kwargs
+(``core.solve_batch_lp(method=..., tile=..., ...)``,
+``kernels.ops.solve_batch_lp_kernel`` with a different signature and a
+different ``normalize`` default, the serving scheduler re-threading
+tile/M/interpret by hand).  A :class:`SolverSpec` replaces all of them:
+it validates once at construction, hashes and compares by value — so it
+can key executable caches and be passed as a static ``jax.jit``
+argument — and builds a reusable :class:`~repro.solver.solver.Solver`
+via :meth:`build`.
+
+The *shuffle policy* lives in the spec rather than in a per-call kwarg:
+``shuffle=True`` applies Seidel's randomised constraint order on every
+solve, keyed by ``seed`` unless the caller passes an explicit key.  A
+key passed at call time always wins, so ``shuffle=False`` specs can
+still opt in per call (the old ``key=`` behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING, Optional
+
+import jax
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from repro.solver.solver import Solver
+
+# Box bound default: "very large so as not to affect the optimum".
+DEFAULT_M = 1.0e4
+
+BACKENDS = ("naive", "rgb", "kernel", "auto")
+DTYPES = ("float32", "float64")
+
+# Backend-default tiles when ``tile=None``: the pure-JAX cooperative
+# solver uses the paper-faithful warp-sized tile; the Pallas kernel
+# picks a VMEM-budgeted tile per input shape at solve time.
+RGB_DEFAULT_TILE = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Full configuration of a batch 2-D LP solve.
+
+    Parameters
+    ----------
+    backend:
+        ``"naive"`` (divergence-emulating vmap baseline), ``"rgb"``
+        (pure-JAX cooperative tiles), ``"kernel"`` (Pallas TPU kernel)
+        or ``"auto"`` (kernel on TPU, rgb elsewhere — resolved against
+        the running JAX backend by :meth:`resolve`/:meth:`build`).
+    tile:
+        problems per cooperative tile.  ``None`` means the backend
+        default: 32 for ``rgb``, a VMEM-budgeted per-shape choice for
+        ``kernel``; ignored by ``naive``.
+    chunk:
+        lane-chunk size for the chunked O(i) re-solve (0 = dense).
+    M:
+        box bound on both coordinates (must not bind at the optimum).
+    normalize:
+        scale every constraint to unit norm before solving (keeps every
+        epsilon an absolute distance; strongly recommended).
+    shuffle:
+        apply Seidel's randomised constraint order on every solve,
+        keyed by ``seed`` unless a per-call key is given.
+    seed:
+        key for ``shuffle=True`` when no per-call key overrides it.
+    interpret:
+        ``kernel`` backend only — run the Pallas kernel body in
+        interpret mode.  ``None`` resolves to True on a CPU backend so
+        the kernel stays runnable in tests/CI.
+    dtype:
+        solve precision, ``"float32"`` or ``"float64"`` (inputs are
+        cast on entry).
+    """
+
+    backend: str = "auto"
+    tile: Optional[int] = None
+    chunk: int = 0
+    M: float = DEFAULT_M
+    normalize: bool = True
+    shuffle: bool = False
+    seed: int = 0
+    interpret: Optional[bool] = None
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of "
+                f"{BACKENDS}")
+        if self.tile is not None and (not isinstance(self.tile, int)
+                                      or self.tile < 1):
+            raise ValueError(f"tile={self.tile!r} must be a positive int "
+                             "or None")
+        if not isinstance(self.chunk, int) or self.chunk < 0:
+            raise ValueError(f"chunk={self.chunk!r} must be an int >= 0")
+        M = float(self.M)
+        if not M > 0.0:
+            raise ValueError(f"M={self.M!r} must be > 0")
+        object.__setattr__(self, "M", M)
+        if not isinstance(self.seed, int):
+            raise ValueError(f"seed={self.seed!r} must be an int")
+        dt = str(self.dtype)
+        if dt not in DTYPES:
+            raise ValueError(f"dtype={self.dtype!r}; expected one of "
+                             f"{DTYPES}")
+        object.__setattr__(self, "dtype", dt)
+
+    # -- resolution ------------------------------------------------------
+
+    @property
+    def is_resolved(self) -> bool:
+        """True once ``backend`` and ``interpret`` are concrete."""
+        return self.backend != "auto" and self.interpret is not None
+
+    def resolve(self, platform: Optional[str] = None) -> "SolverSpec":
+        """Pin ``"auto"`` choices against the running JAX backend and
+        canonicalise inert fields.
+
+        Environment-dependent choices (``backend="auto"``,
+        ``interpret=None``) become concrete; fields that cannot affect
+        execution are pinned (``interpret`` off the kernel backend,
+        ``seed`` when ``shuffle=False``, the rgb default ``tile``), so
+        specs with identical execution plans resolve equal and share
+        executable-cache entries.  The kernel backend keeps
+        ``tile=None`` — there it means "pick a VMEM-budgeted tile per
+        shape".
+        """
+        platform = platform or jax.default_backend()
+        if self.dtype == "float64" and not jax.config.jax_enable_x64:
+            raise ValueError(
+                "dtype='float64' needs jax x64 enabled (set "
+                "jax_enable_x64=True or JAX_ENABLE_X64=1); refusing to "
+                "silently truncate the solve to float32")
+        backend = self.backend
+        if backend == "auto":
+            backend = "kernel" if platform == "tpu" else "rgb"
+        if backend == "kernel":
+            interpret = (platform == "cpu" if self.interpret is None
+                         else bool(self.interpret))
+        else:
+            interpret = False
+        tile = self.tile
+        if backend == "rgb" and tile is None:
+            tile = RGB_DEFAULT_TILE
+        seed = self.seed if self.shuffle else 0
+        if (backend == self.backend and interpret == self.interpret
+                and tile == self.tile and seed == self.seed):
+            return self
+        return dataclasses.replace(self, backend=backend,
+                                   interpret=interpret, tile=tile,
+                                   seed=seed)
+
+    # -- construction of the runtime object ------------------------------
+
+    def build(self) -> "Solver":
+        """Resolve and wrap into a reusable :class:`Solver` (fresh
+        instance; use :func:`get_solver` for a process-wide cached
+        one)."""
+        from repro.solver.solver import Solver  # deferred: import cycle
+        return Solver(self)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_solver(spec: SolverSpec) -> "Solver":
+    from repro.solver.solver import Solver  # deferred: import cycle
+    return Solver(spec)
+
+
+def get_solver(spec: SolverSpec) -> "Solver":
+    """Process-wide ``spec -> Solver`` cache.
+
+    Equal specs share one Solver — and therefore one per-shape compile
+    cache — which is what makes the ``core.solve_batch_lp`` shim free
+    of repeated jit setup and keeps sweeps like
+    ``[get_solver(s).solve(batch) for s in sweep]`` cheap to re-run.
+    """
+    return _cached_solver(spec.resolve())

@@ -9,6 +9,8 @@ minimal container.
 """
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

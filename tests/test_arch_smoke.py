@@ -1,6 +1,5 @@
 """Per-architecture smoke tests: reduced same-family config, one forward /
 train step on CPU, asserting output shapes and no NaNs (the brief's (f))."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ sequential recurrence, MoE routing invariants, RoPE, losses."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.models import layers as L

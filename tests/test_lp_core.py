@@ -10,7 +10,7 @@ from scipy.optimize import linprog
 from repro.core import (adversarial_lp, infeasible_lp, make_batch,
                         normalize_batch, pad_batch, ragged_feasible_lp,
                         random_feasible_lp, replicated_lp, shuffle_batch,
-                        solve_batch_lp, solve_naive, solve_rgb)
+                        solve_batch_lp)
 
 M_BOX = 1.0e4
 RTOL = 3e-4

@@ -10,8 +10,9 @@ import pytest
 from repro.core import (concat_batches, make_batch, pad_batch_dim,
                         ragged_feasible_lp, solve_batch_lp, split_batch)
 from repro.kernels import ops
-from repro.serve_lp import (BatchScheduler, ExecSpec, ServeMetrics,
-                            bucket_batch, bucket_m, shape_ladder)
+from repro.serve_lp import (BatchScheduler, ExecSpec, ExecutableCache,
+                            ServeMetrics, SolverSpec, bucket_batch,
+                            bucket_m, shape_ladder)
 from repro.serve_lp.bench import BenchConfig, make_request, run_traffic
 
 
@@ -64,10 +65,56 @@ def test_bucket_batch_ladder():
 def test_exec_spec_validation():
     # only the kernel has a LANE-layout requirement
     with pytest.raises(ValueError):
-        ExecSpec(bucket_m=100, b_pad=32, method="kernel", tile=32, chunk=0)
-    ExecSpec(bucket_m=16, b_pad=32, method="rgb", tile=32, chunk=0)
+        ExecSpec(bucket_m=100, b_pad=32,
+                 solver=SolverSpec(backend="kernel", tile=32))
+    ExecSpec(bucket_m=16, b_pad=32, solver=SolverSpec(backend="rgb",
+                                                      tile=32))
     with pytest.raises(ValueError):
-        ExecSpec(bucket_m=128, b_pad=33, method="rgb", tile=32, chunk=0)
+        ExecSpec(bucket_m=128, b_pad=33,
+                 solver=SolverSpec(backend="rgb", tile=32))
+    # b_pad padding needs a concrete tile (kernel keeps tile=None as
+    # "pick per shape"; rgb canonicalises tile=None to 32 on resolve)
+    with pytest.raises(ValueError):
+        ExecSpec(bucket_m=128, b_pad=32,
+                 solver=SolverSpec(backend="kernel"))
+    assert ExecSpec(bucket_m=128, b_pad=32,
+                    solver=SolverSpec(backend="rgb")).tile == 32
+    with pytest.raises(TypeError):
+        ExecSpec(bucket_m=128, b_pad=32, solver="rgb")
+
+
+def test_exec_spec_keys_on_full_solver_spec():
+    """Two schedulers with different solver specs must never alias
+    executables: the whole SolverSpec is part of the cache key."""
+    mk = lambda **kw: ExecSpec(bucket_m=16, b_pad=32,
+                               solver=SolverSpec(backend="rgb", tile=32,
+                                                 **kw))
+    assert mk() == mk()
+    assert hash(mk()) == hash(mk())
+    assert mk(M=2.0e4) != mk()
+    assert mk(seed=1, shuffle=True) != mk(shuffle=True)
+    assert mk(normalize=False) != mk()
+    # resolution canonicalises: auto==rgb on a non-TPU test backend
+    if jax.default_backend() != "tpu":
+        auto = ExecSpec(bucket_m=16, b_pad=32,
+                        solver=SolverSpec(backend="auto", tile=32))
+        assert auto == mk()
+
+
+def test_scheduler_accepts_spec_and_rejects_mixed_kwargs():
+    spec = SolverSpec(backend="rgb", tile=8, chunk=64)
+    sched = BatchScheduler(spec, max_batch=4)
+    assert sched.spec.tile == 8 and sched.spec.chunk == 64
+    with pytest.raises(TypeError):
+        BatchScheduler(spec, method="rgb")
+    with pytest.raises(TypeError):
+        BatchScheduler("rgb")
+    # tile=None gets the serving default so the b_pad ladder is defined
+    assert BatchScheduler(SolverSpec(backend="rgb")).spec.tile == 32
+    # shuffle specs are rejected: the flush-wide shuffle would make a
+    # request's result depend on its position in the super-batch
+    with pytest.raises(ValueError, match="shuffle"):
+        BatchScheduler(SolverSpec(backend="rgb", shuffle=True))
 
 
 # -- core batch utilities ------------------------------------------------
@@ -145,15 +192,16 @@ def test_manual_flush_and_pending():
 
 def test_roundtrip_bit_identical_rgb():
     """Mixed-shape requests through the scheduler give bit-identical
-    results to direct solve_batch_lp per request (same method/tile)."""
-    sched = BatchScheduler(method="rgb", max_batch=1000, tile=32)
+    results to a direct solve with the *same* SolverSpec."""
+    spec = SolverSpec(backend="rgb", tile=32)
+    sched = BatchScheduler(spec, max_batch=1000)
+    solver = spec.build()
     reqs = _mixed_requests()
     futs = [sched.submit(*r) for r in reqs]
     sched.flush()
     for (A, b, c), f in zip(reqs, futs):
         r = f.result(timeout=60.0)
-        direct = solve_batch_lp(make_batch(A, b, c), method="rgb",
-                                tile=32)
+        direct = solver.solve(make_batch(A, b, c))
         assert bool(direct.feasible[0]) == r.feasible
         np.testing.assert_array_equal(np.asarray(direct.x[0]), r.x)
 
@@ -216,8 +264,22 @@ def test_cache_hit_accounting():
     assert stats["hit_rate"] == pytest.approx(2 / 4)
 
 
+def test_bogus_method_rejected_at_construction():
+    """Stringly-typed dispatch used to fail only at flush time; the
+    SolverSpec validates when the scheduler is built."""
+    with pytest.raises(ValueError):
+        BatchScheduler(method="bogus", max_batch=1000, tile=8)
+    with pytest.raises(ValueError):
+        SolverSpec(backend="bogus")
+
+
+def _failing_builder(spec):
+    raise ValueError(f"executable build refused for {spec.bucket_m}")
+
+
 def test_solver_error_propagates_to_futures():
-    sched = BatchScheduler(method="bogus", max_batch=1000, tile=8)
+    sched = BatchScheduler(max_batch=1000, tile=8)
+    sched.cache = ExecutableCache(_failing_builder)
     f = sched.submit(*_mixed_requests(ms=(5,), reps=1)[0])
     with pytest.raises(ValueError):
         sched.flush()
@@ -227,8 +289,8 @@ def test_solver_error_propagates_to_futures():
 def test_timer_thread_survives_solver_error():
     """A failing wait-triggered flush must not kill the flush thread:
     later requests still get flushed (and their futures resolved)."""
-    sched = BatchScheduler(method="bogus", max_batch=1000,
-                           max_wait_s=0.01, tile=8)
+    sched = BatchScheduler(max_batch=1000, max_wait_s=0.01, tile=8)
+    sched.cache = ExecutableCache(_failing_builder)
     sched.start()
     try:
         req = _mixed_requests(ms=(5,), reps=1)[0]

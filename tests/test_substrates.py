@@ -1,18 +1,13 @@
 """Data pipeline, checkpointing, optimizer and fault-tolerance tests."""
-import json
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.ckpt.checkpoint import Checkpointer
 from repro.data.pipeline import DataConfig, TokenSource
 from repro.launch.elastic import Heartbeat, StragglerMonitor
-from repro.optim import (AdamW, apply_updates, compressed_psum,
-                         dequantize_int8, init_error_state,
+from repro.optim import (AdamW, apply_updates, dequantize_int8,
                          lp_constrain_updates, quantize_int8,
                          sync_duplicated_grads)
 
