@@ -11,7 +11,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import normalize_batch, random_feasible_lp, shuffle_batch
+from repro.core import (normalize_batch, pack, random_feasible_lp,
+                        shuffle_batch)
 from repro.solver import SolverSpec
 
 
@@ -25,17 +26,27 @@ def run(full: bool = False):
         hostA = np.asarray(lp.A)
         hostb = np.asarray(lp.b)
         hostc = np.asarray(lp.c)
+        pb = pack(lp)
+        hostL = np.asarray(pb.L)
 
         def transfer():
             return (jax.device_put(hostA), jax.device_put(hostb),
                     jax.device_put(hostc))
 
+        def transfer_packed():
+            # The serving path's shape: one contiguous packed block
+            # (plus the small c) instead of three AoS arrays.
+            return (jax.device_put(hostL), jax.device_put(hostc))
+
         t_x = time_fn(transfer, iters=5)
+        t_xp = time_fn(transfer_packed, iters=5)
         solver = SolverSpec(backend="rgb", normalize=False).build()
         t_c = time_fn(solver.solve, lp)
         frac = t_x / (t_x + t_c)
         rows.append(emit(f"fig5/b{B}/m{m}", t_x + t_c,
                          f"transfer_frac={frac:.3f}"))
+        rows.append(emit(f"fig5/b{B}/m{m}/packed", t_xp + t_c,
+                         f"transfer_frac={t_xp / (t_xp + t_c):.3f}"))
     return rows
 
 

@@ -15,12 +15,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated names (fig3..fig7, serve, "
-                         "solver_sweep)")
+                         "solver_sweep, pack_layout)")
     args = ap.parse_args()
 
     from benchmarks import (fig3_lp_size, fig4_batch, fig5_transfer,
                             fig6_reduction, fig7_naive_vs_rgb,
-                            serve_bench, solver_sweep)
+                            pack_layout, serve_bench, solver_sweep)
     figs = {
         "fig3": fig3_lp_size.run,
         "fig4": fig4_batch.run,
@@ -29,6 +29,7 @@ def main() -> None:
         "fig7": fig7_naive_vs_rgb.run,
         "serve": serve_bench.run,
         "solver_sweep": solver_sweep.run,
+        "pack_layout": pack_layout.run,
     }
     only = set(args.only.split(",")) if args.only else set(figs)
     print("name,us_per_call,derived")

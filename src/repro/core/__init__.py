@@ -15,12 +15,26 @@ from repro.core.lp import (
     shuffle_batch,
     split_batch,
 )
+from repro.core.packed import (
+    PackedLPBatch,
+    concat_packed,
+    normalize_packed,
+    pack,
+    pack_call_count,
+    pad_packed,
+    pad_packed_batch_dim,
+    shuffle_packed,
+    split_packed,
+    unpack,
+)
 from repro.core.seidel import solve_batch_lp, solve_naive, solve_rgb
 
 __all__ = [
-    "LPBatch", "LPSolution", "adversarial_lp", "concat_batches",
-    "infeasible_lp", "make_batch", "normalize_batch", "pad_batch",
-    "pad_batch_dim", "ragged_feasible_lp", "random_feasible_lp",
-    "replicated_lp", "shuffle_batch", "split_batch", "solve_batch_lp",
-    "solve_naive", "solve_rgb",
+    "LPBatch", "LPSolution", "PackedLPBatch", "adversarial_lp",
+    "concat_batches", "concat_packed", "infeasible_lp", "make_batch",
+    "normalize_batch", "normalize_packed", "pack", "pack_call_count",
+    "pad_batch", "pad_batch_dim", "pad_packed", "pad_packed_batch_dim",
+    "ragged_feasible_lp", "random_feasible_lp", "replicated_lp",
+    "shuffle_batch", "shuffle_packed", "split_batch", "split_packed",
+    "solve_batch_lp", "solve_naive", "solve_rgb", "unpack",
 ]

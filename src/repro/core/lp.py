@@ -39,6 +39,12 @@ class LPBatch:
     def m(self) -> int:
         return self.A.shape[1]
 
+    def pack(self, m_pad: int | None = None):
+        """AoS -> packed SoA (:class:`~repro.core.packed.PackedLPBatch`).
+        Pack once before repeated solves; see ``repro.core.packed``."""
+        from repro.core.packed import pack  # deferred: import cycle
+        return pack(self, m_pad)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +159,15 @@ def split_batch(batch: LPBatch, sizes: list[int],
     return out
 
 
+def _row_norms(ax: jax.Array, ay: jax.Array) -> jax.Array:
+    """||a|| per constraint from its components — the one norm op both
+    the AoS and packed normalisers run, so packed/AoS bit-identity holds
+    by construction.  Must stay reduce-based (not a hand-fused
+    ``sqrt(x*x + y*y)``, which XLA FMA-fuses differently under jit than
+    in eager execution)."""
+    return jnp.linalg.norm(jnp.stack([ax, ay], axis=-1), axis=-1)
+
+
 def normalize_batch(batch: LPBatch, eps: float = 1e-30) -> LPBatch:
     """Scale every constraint so ||a_h|| = 1 (zero-norm padding rows kept).
 
@@ -160,7 +175,7 @@ def normalize_batch(batch: LPBatch, eps: float = 1e-30) -> LPBatch:
     distance, which is what keeps float32 behaviour within the paper's own
     5-significant-figure tolerance.
     """
-    n = jnp.linalg.norm(batch.A, axis=-1, keepdims=True)  # (B, m, 1)
+    n = _row_norms(batch.A[..., 0], batch.A[..., 1])[..., None]  # (B, m, 1)
     is_pad = n[..., 0] < eps
     scale = jnp.where(is_pad[..., None], 1.0, 1.0 / jnp.maximum(n, eps))
     return LPBatch(

@@ -42,14 +42,17 @@ LANE = 128
 
 
 def _pick_tile(m_pad: int, batch: int | None = None,
-               vmem_budget_bytes: int = 8 * 1024 * 1024) -> int:
+               vmem_budget_bytes: int = 8 * 1024 * 1024,
+               itemsize: int = 4) -> int:
     """Choose the batch tile so one grid step's VMEM working set fits the
     budget.  Per problem that is the packed constraint block (4 rows of
-    m_pad lanes), the c/mv inputs (2 + 1 words) and the x/feas outputs
-    (2 + 1 words), all float32/int32.  T stays a multiple of 8 (sublanes)
-    and, when the batch size is known, is clamped to ceil(batch/8)*8 so a
+    m_pad lanes), the c input and x output (2 + 2 words) at the solve
+    dtype's ``itemsize``, plus the int32 mv input and feas output
+    (2 * 4 bytes) — so float64 solves get half-sized tiles instead of
+    overshooting the budget 2x.  T stays a multiple of 8 (sublanes) and,
+    when the batch size is known, is clamped to ceil(batch/8)*8 so a
     small batch is not padded all the way up to DEFAULT_TILE."""
-    bytes_per_problem = (4 * m_pad + 6) * 4
+    bytes_per_problem = (4 * m_pad + 4) * itemsize + 2 * 4
     t = vmem_budget_bytes // bytes_per_problem
     t = max(8, min(DEFAULT_TILE, (t // 8) * 8))
     if batch is not None:
@@ -190,7 +193,7 @@ def rgb_pallas(
     """Launch the RGB kernel.  B must be a multiple of the tile and m_pad a
     multiple of 128 (handled by kernels.ops)."""
     B, _, m_pad = L.shape
-    T = tile or _pick_tile(m_pad, B)
+    T = tile or _pick_tile(m_pad, B, itemsize=L.dtype.itemsize)
     if B % T:
         raise ValueError(f"batch {B} not a multiple of tile {T}")
     if m_pad % LANE:

@@ -1,24 +1,24 @@
-"""Layout plumbing for the Pallas RGB kernel — the *kernel backend*.
+"""Compatibility layer for the Pallas RGB kernel — the *kernel backend*.
 
-This module is the implementation layer behind
-``SolverSpec(backend="kernel")``: it converts an ``LPBatch`` to the
-packed struct-of-arrays layout the kernel wants (constraint index on
-the 128-lane minor axis) and pads the batch dimension to a tile
-multiple with neutral problems.  The public way to run the kernel is
-``repro.solver``::
+The packed struct-of-arrays layout the kernel consumes is now a
+first-class type, :class:`repro.core.packed.PackedLPBatch`; the solver
+core hands its ``L`` block to the kernel directly and a pre-packed
+batch never round-trips back to AoS.  The public way to run the kernel
+is ``repro.solver``::
 
     from repro.solver import SolverSpec
     sol = SolverSpec(backend="kernel", interpret=True).build().solve(batch)
 
-``solve_batch_lp_kernel`` remains as a thin compatibility wrapper over
-that path (note its historical ``normalize=False`` default — the
-unified API defaults to True).
+This module keeps the historical entry points as thin wrappers:
+``pack_constraints`` over :func:`repro.core.packed.pack` (plus the
+kernel's LANE-multiple validation) and ``solve_batch_lp_kernel`` over
+the unified spec path (note its historical ``normalize=False`` default
+— the unified API defaults to True).
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core.lp import LPBatch, LPSolution, PAD_B
+from repro.core.lp import LPBatch, LPSolution
+from repro.core.packed import pack, pad_packed
 from repro.kernels.batch_lp import LANE
 
 
@@ -26,43 +26,21 @@ def pack_constraints(batch: LPBatch, m_pad: int | None = None):
     """LPBatch -> (L (B,4,m_pad), c (B,2), m_valid (B,1)) with unit-norm
     rows assumed (call lp.normalize_batch first).
 
-    ``m_pad`` overrides the lane padding target: the serving layer passes
-    its shape bucket here so every batch in a bucket packs to the *same*
-    layout and hits the same compiled executable, instead of recomputing a
-    per-call minimal padding."""
-    B, m = batch.batch, batch.m
+    Thin wrapper over :func:`repro.core.packed.pack` that enforces the
+    kernel's lane layout.  ``m_pad`` overrides the padding target: the
+    serving layer passes its shape bucket here so every batch in a
+    bucket packs to the *same* layout and hits the same compiled
+    executable.  Prefer ``core.pack`` + ``core.pad_packed`` in new code
+    — they return the :class:`~repro.core.packed.PackedLPBatch` the
+    solver accepts directly."""
+    m = batch.m
     if m_pad is None:
         m_pad = -(-m // LANE) * LANE
     if m_pad < m or m_pad % LANE:
         raise ValueError(f"m_pad={m_pad} must be a multiple of {LANE} "
                          f">= m={m}")
-    dt = batch.A.dtype
-    ax = batch.A[..., 0]
-    ay = batch.A[..., 1]
-    bb = batch.b
-    if m_pad != m:
-        pad = ((0, 0), (0, m_pad - m))
-        ax = jnp.pad(ax, pad)
-        ay = jnp.pad(ay, pad)
-        bb = jnp.pad(bb, pad, constant_values=PAD_B)
-    zeros = jnp.zeros_like(ax)
-    L = jnp.stack([ax, ay, bb, zeros], axis=1)  # (B, 4, m_pad)
-    return L, batch.c.astype(dt), batch.m_valid.reshape(B, 1)
-
-
-def _pad_batch_dim(L, c, mv, T):
-    B = L.shape[0]
-    Bp = -(-B // T) * T
-    if Bp == B:
-        return L, c, mv, B
-    pad = Bp - B
-    L = jnp.pad(L, ((0, pad), (0, 0), (0, 0)))
-    # Neutral problems: c=(1,0), m_valid=0 -> solved at the box corner in
-    # zero iterations; they never trigger a re-solve.
-    c = jnp.concatenate(
-        [c, jnp.broadcast_to(jnp.asarray([1.0, 0.0], c.dtype), (pad, 2))])
-    mv = jnp.concatenate([mv, jnp.zeros((pad, 1), mv.dtype)])
-    return L, c, mv, B
+    pb = pad_packed(pack(batch), m_pad)
+    return pb.L, pb.c, pb.m_valid
 
 
 def solve_batch_lp_kernel(

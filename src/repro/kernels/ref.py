@@ -9,13 +9,16 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.lp import LPBatch
+from repro.core.packed import PackedLPBatch, unpack
 from repro.core.seidel import solve_rgb
 
 
 def unpack_constraints(L, c, m_valid) -> LPBatch:
-    A = jnp.stack([L[:, 0, :], L[:, 1, :]], axis=-1)  # (B, m_pad, 2)
-    b = L[:, 2, :]
-    return LPBatch(A=A, b=b, c=c, m_valid=m_valid.reshape(-1).astype(jnp.int32))
+    """Raw packed arrays -> AoS batch (wrapper over core.packed.unpack)."""
+    L = jnp.asarray(L)
+    return unpack(PackedLPBatch(
+        L=L, c=jnp.asarray(c),
+        m_valid=jnp.asarray(m_valid).reshape(L.shape[0], 1)))
 
 
 def solve_packed_ref(L, c, m_valid, *, M: float = 1.0e4):

@@ -9,11 +9,16 @@ via ``with scheduler:`` or :meth:`start`).  ``flush()`` drains
 everything immediately — the deterministic path used by tests and
 step-synchronous callers like the crowd simulation.
 
-A flush pads the batch dimension up the geometric ladder (see
-``buckets``), fetches the executable for its :class:`~repro.serve_lp.
-buckets.ExecSpec` from the cache, solves, and resolves each future with
-an :class:`LPResult` in submission order.  Solver failures propagate to
-every future of the flush via ``set_exception``.
+A flush assembles its super-batch *directly into the packed SoA layout*
+the device wants — one host numpy block ``L (b_pad, 4, bucket_m)`` with
+``(a_x, a_y, b, 0)`` rows — pads the batch dimension up the geometric
+ladder (see ``buckets``), fetches the executable for its
+:class:`~repro.serve_lp.buckets.ExecSpec` from the cache, solves, and
+resolves each future with an :class:`LPResult` in submission order.
+There is no AoS intermediate and no device-side repack: the executable
+consumes ``(L, c, mv)`` as assembled (``core.pack_call_count`` stays
+flat across flushes).  Solver failures propagate to every future of the
+flush via ``set_exception``.
 """
 from __future__ import annotations
 
@@ -26,7 +31,7 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core.lp import PAD_A, PAD_B
+from repro.core.lp import PAD_B
 from repro.kernels.batch_lp import LANE
 from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
                                     bucket_m)
@@ -54,9 +59,13 @@ class LPResult:
 
 @dataclasses.dataclass
 class _Pending:
-    A: np.ndarray
-    b: np.ndarray
-    c: np.ndarray
+    """One queued request, already split into the packed row layout so
+    a flush copies straight into the ``L`` block."""
+
+    ax: np.ndarray       # (m,) constraint normal x-components
+    ay: np.ndarray       # (m,) constraint normal y-components
+    b: np.ndarray        # (m,) offsets
+    c: np.ndarray        # (2,) objective
     m: int
     future: Future
     t_submit: float
@@ -130,6 +139,11 @@ class BatchScheduler:
         if spec.tile is None:
             spec = dataclasses.replace(spec, tile=DEFAULT_SERVE_TILE)
         self.spec = spec
+        # Request buffers are assembled host-side at the solve dtype, so
+        # a float64 spec is not silently truncated to float32 on submit.
+        # (resolve() above already rejected x64 specs when jax x64 is
+        # off, matching the solver's own check.)
+        self._dtype = np.dtype(spec.dtype)
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         # Only the Pallas kernel needs LANE-multiple constraint counts;
@@ -185,17 +199,21 @@ class BatchScheduler:
 
     def submit(self, A, b, c) -> Future:
         """Submit one LP (A (m,2), b (m,), c (2,)); returns a Future
-        resolving to :class:`LPResult`."""
-        A = np.asarray(A, np.float32).reshape(-1, 2)
+        resolving to :class:`LPResult`.  Buffers are kept at the spec's
+        dtype and pre-split into packed rows."""
+        dt = self._dtype
+        A = np.asarray(A, dt).reshape(-1, 2)
         m = A.shape[0]
-        b = np.asarray(b, np.float32).reshape(m)
-        c = np.asarray(c, np.float32).reshape(2)
+        b = np.asarray(b, dt).reshape(m)
+        c = np.asarray(c, dt).reshape(2)
         if m < 1:
             raise ValueError("LP needs at least one constraint")
         if self._closed:
             raise RuntimeError("scheduler is closed")
         fut: Future = Future()
-        req = _Pending(A=A, b=b, c=c, m=m, future=fut,
+        req = _Pending(ax=np.ascontiguousarray(A[:, 0]),
+                       ay=np.ascontiguousarray(A[:, 1]),
+                       b=b, c=c, m=m, future=fut,
                        t_submit=time.perf_counter())
         bm = bucket_m(m, base=self.bucket_base)
         self.metrics.touch_clock()
@@ -212,9 +230,9 @@ class BatchScheduler:
     def submit_many(self, As, bs, cs, m_valid=None) -> List[Future]:
         """Row-wise submit of stacked arrays (B, m, 2)/(B, m)/(B, 2);
         ``m_valid`` optionally trims each problem's constraint count."""
-        As = np.asarray(As, np.float32)
-        bs = np.asarray(bs, np.float32)
-        cs = np.asarray(cs, np.float32)
+        As = np.asarray(As, self._dtype)
+        bs = np.asarray(bs, self._dtype)
+        cs = np.asarray(cs, self._dtype)
         B = As.shape[0]
         if m_valid is None:
             m_valid = np.full((B,), As.shape[1], np.int32)
@@ -294,26 +312,29 @@ class BatchScheduler:
     def _solve(self, bm: int, reqs: List[_Pending], *, reason: str) -> None:
         B = len(reqs)
         b_pad = bucket_batch(B, self.batch_unit)
-        # Host-side numpy mirror of lp.pad_batch / lp.pad_batch_dim (same
-        # neutral-row and neutral-problem convention) — assembled here so
-        # a flush does no device work before the cached executable runs.
-        A = np.broadcast_to(np.asarray(PAD_A, np.float32),
-                            (b_pad, bm, 2)).copy()
-        b = np.full((b_pad, bm), PAD_B, np.float32)
-        c = np.broadcast_to(np.asarray([1.0, 0.0], np.float32),
+        # Host-side numpy twin of core.packed: the flush is assembled
+        # *directly* into the packed (b_pad, 4, bm) block — neutral
+        # columns/problems are a_x = a_y = 0, b = PAD_B, c = (1, 0),
+        # m_valid = 0 — so the executable consumes it as-is: no AoS
+        # intermediate, no device-side re-stack.
+        dt = self._dtype
+        L = np.zeros((b_pad, 4, bm), dt)
+        L[:, 2, :] = PAD_B
+        c = np.broadcast_to(np.asarray([1.0, 0.0], dt),
                             (b_pad, 2)).copy()
-        mv = np.zeros((b_pad,), np.int32)
+        mv = np.zeros((b_pad, 1), np.int32)
         for i, r in enumerate(reqs):
-            A[i, :r.m] = r.A
-            b[i, :r.m] = r.b
+            L[i, 0, :r.m] = r.ax
+            L[i, 1, :r.m] = r.ay
+            L[i, 2, :r.m] = r.b
             c[i] = r.c
-            mv[i] = r.m
+            mv[i, 0] = r.m
         spec = ExecSpec(bucket_m=bm, b_pad=b_pad, solver=self.spec,
                         n_devices=len(self._devices))
         try:
             fn = self.cache.get(spec)
             t0 = time.perf_counter()
-            x, feas = fn(A, b, c, mv)
+            x, feas = fn(L, c, mv)
             dt_solve = time.perf_counter() - t0
         except Exception as e:  # propagate to every waiter, don't hang
             for r in reqs:

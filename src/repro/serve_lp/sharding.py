@@ -8,10 +8,14 @@ problems), and results gather back to host order.  The scheduler
 guarantees ``b_pad % (tile * n_devices) == 0`` so every shard is a whole
 number of kernel tiles.
 
-The built callable takes host arrays ``(A (B,m,2), b (B,m), c (B,2),
-mv (B,))`` already padded to the spec's shapes and returns numpy
-``(x (B,2), feasible (B,) bool)`` — host-side because the scheduler
-scatters the rows straight into per-request futures.
+The built callable takes the scheduler's packed host buffers
+``(L (B, 4, m), c (B, 2), mv (B, 1))`` already padded to the spec's
+shapes and returns numpy ``(x (B, 2), feasible (B,) bool)`` — host-side
+because the scheduler scatters the rows straight into per-request
+futures.  The packed block transfers and shards as one contiguous
+array; the solve wraps it in a :class:`~repro.core.packed.PackedLPBatch`
+view (no repack) and runs the same :func:`repro.solver.solve_with_spec`
+core as every other entry point.
 """
 from __future__ import annotations
 
@@ -20,20 +24,20 @@ from typing import Callable, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core.lp import LPBatch
+from repro.core.packed import PackedLPBatch
 from repro.serve_lp.buckets import ExecSpec
 from repro.solver import solve_with_spec
 
 
 def _make_solve(spec: ExecSpec) -> Callable:
-    """The per-shard solve as a pure jax function of dense arrays —
+    """The per-shard solve as a pure jax function of the packed arrays —
     the same :func:`repro.solver.solve_with_spec` core every other
     entry point runs through, so scheduler round-trips stay
     bit-identical to direct solves with the same spec."""
 
-    def solve(A, b, c, mv):
+    def solve(L, c, mv):
         sol = solve_with_spec(spec.solver,
-                              LPBatch(A=A, b=b, c=c, m_valid=mv))
+                              PackedLPBatch(L=L, c=c, m_valid=mv))
         return sol.x, sol.feasible
 
     return solve
@@ -56,8 +60,8 @@ def build_executable(
     if D == 1:
         jitted = jax.jit(solve)
 
-        def run(A, b, c, mv):
-            x, feas = jitted(A, b, c, mv)
+        def run(L, c, mv):
+            x, feas = jitted(L, c, mv)
             return np.asarray(x), np.asarray(feas)
 
         return run
@@ -68,8 +72,8 @@ def build_executable(
     def shard(a):
         return a.reshape((D, per) + a.shape[1:])
 
-    def run(A, b, c, mv):
-        x, feas = pmapped(shard(A), shard(b), shard(c), shard(mv))
+    def run(L, c, mv):
+        x, feas = pmapped(shard(L), shard(c), shard(mv))
         return (np.asarray(x).reshape(spec.b_pad, 2),
                 np.asarray(feas).reshape(spec.b_pad))
 

@@ -8,6 +8,8 @@ One operation, many LPs, every backend::
     sol = solver.solve(batch)            # jit-cached per input shape
     one = solver.solve_one(A, b, c)      # single-LP convenience
     sol = jax.jit(solver)(batch)         # composable pure call
+    sol = solver.solve(batch.pack())     # packed SoA batches solve
+                                         # bit-identically, no repack
 
     # same problem, every backend, bit-for-bit comparable:
     sweep = [SolverSpec(backend=b, interpret=True if b == "kernel"

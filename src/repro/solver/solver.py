@@ -14,21 +14,43 @@ arrays traced).  Every layer — the ``core.solve_batch_lp`` deprecation
 shim, ``kernels.ops``, the serving executables in
 ``serve_lp.sharding`` — runs through it, which is what makes "same
 problem, every backend, bit-for-bit comparable" a one-liner.
+
+Both entry points accept either constraint layout: the AoS
+:class:`~repro.core.lp.LPBatch` or the packed SoA
+:class:`~repro.core.packed.PackedLPBatch`.  A packed batch stays packed
+end-to-end — normalise/shuffle run in their packed-native forms and the
+kernel backend consumes ``L`` directly; the dense backends unpack at
+the solver boundary (inside the trace, fused by XLA) because their
+algorithms are written against the AoS view.  Since both layouts run
+the identical scalar pipeline, ``solve(pack(batch))`` is bit-identical
+to ``solve(batch)``.  (One caveat: padding the constraint axis — in
+*either* layout — changes the score shape ``shuffle`` draws from, so
+for ``shuffle=True`` specs the identity needs matching ``m``; a padded
+batch still agrees on the optimum to the usual tolerance, just not
+bit-for-bit.)
 """
 from __future__ import annotations
+
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.lp import (LPBatch, LPSolution, normalize_batch,
                            shuffle_batch)
+from repro.core.packed import (PackedLPBatch, normalize_packed, pack,
+                               pad_packed, pad_packed_batch_dim,
+                               shuffle_packed, unpack)
 from repro.core.seidel import solve_naive, solve_rgb
 from repro.solver.spec import RGB_DEFAULT_TILE, SolverSpec
 
+AnyLPBatch = Union[LPBatch, PackedLPBatch]
 
-def solve_with_spec(spec: SolverSpec, batch: LPBatch,
+
+def solve_with_spec(spec: SolverSpec, batch: AnyLPBatch,
                     key=None) -> LPSolution:
-    """Solve ``batch`` per ``spec`` — the pure, trace-safe core.
+    """Solve ``batch`` (AoS or packed) per ``spec`` — the pure,
+    trace-safe core.
 
     ``key`` overrides the spec's shuffle policy for this call; with
     ``key=None`` the batch is shuffled iff ``spec.shuffle`` (keyed by
@@ -36,41 +58,64 @@ def solve_with_spec(spec: SolverSpec, batch: LPBatch,
     """
     spec = spec.resolve()
     dt = jnp.dtype(spec.dtype)
+    if key is None and spec.shuffle:
+        key = jax.random.key(spec.seed)
+    if isinstance(batch, PackedLPBatch):
+        return _solve_packed(spec, batch, dt, key)
     # Cast each array (astype is the identity when already dt): A alone
     # matching must not let a mixed-dtype b or c leak through.
     batch = LPBatch(A=batch.A.astype(dt), b=batch.b.astype(dt),
                     c=batch.c.astype(dt), m_valid=batch.m_valid)
     if spec.normalize:
         batch = normalize_batch(batch)
-    if key is None and spec.shuffle:
-        key = jax.random.key(spec.seed)
     if key is not None:
         batch = shuffle_batch(key, batch)
+    if spec.backend == "kernel":
+        return _solve_kernel(spec, pack(batch))
+    return _solve_dense(spec, batch)
+
+
+def _solve_packed(spec: SolverSpec, pb: PackedLPBatch, dt,
+                  key) -> LPSolution:
+    """The packed-native pipeline: cast -> normalise -> shuffle without
+    leaving the SoA layout, then hand ``L`` to the kernel directly (the
+    dense backends unpack at the boundary — their adapters)."""
+    pb = PackedLPBatch(L=pb.L.astype(dt), c=pb.c.astype(dt),
+                       m_valid=pb.m_valid)
+    if spec.normalize:
+        pb = normalize_packed(pb)
+    if key is not None:
+        pb = shuffle_packed(key, pb)
+    if spec.backend == "kernel":
+        return _solve_kernel(spec, pb)
+    return _solve_dense(spec, unpack(pb))
+
+
+def _solve_dense(spec: SolverSpec, batch: LPBatch) -> LPSolution:
     if spec.backend == "naive":
         return solve_naive(batch, M=spec.M)
-    if spec.backend == "rgb":
-        return solve_rgb(batch, M=spec.M,
-                         tile=spec.tile or RGB_DEFAULT_TILE,
-                         chunk=spec.chunk)
-    return _solve_kernel(spec, batch)
+    return solve_rgb(batch, M=spec.M,
+                     tile=spec.tile or RGB_DEFAULT_TILE,
+                     chunk=spec.chunk)
 
 
-def _solve_kernel(spec: SolverSpec, batch: LPBatch) -> LPSolution:
+def _solve_kernel(spec: SolverSpec, pb: PackedLPBatch) -> LPSolution:
     # Deferred import: kernels.ops wraps this module for its public
     # compatibility surface, so the dependency must point one way only.
-    from repro.kernels.batch_lp import _pick_tile, rgb_pallas
-    from repro.kernels.ops import _pad_batch_dim, pack_constraints
+    from repro.kernels.batch_lp import LANE, _pick_tile, rgb_pallas
 
-    L, c, mv = pack_constraints(batch)
-    tile = spec.tile or _pick_tile(L.shape[-1], L.shape[0])
-    L, c, mv, B = _pad_batch_dim(L, c, mv, tile)
-    x, feas = rgb_pallas(L, c, mv, M=spec.M, tile=tile, chunk=spec.chunk,
-                         interpret=spec.interpret)
+    B = pb.batch
+    pb = pad_packed(pb, -(-pb.m_pad // LANE) * LANE)
+    tile = spec.tile or _pick_tile(pb.m_pad, B,
+                                   itemsize=pb.L.dtype.itemsize)
+    run = pad_packed_batch_dim(pb, -(-B // tile) * tile)
+    x, feas = rgb_pallas(run.L, run.c, run.m_valid, M=spec.M, tile=tile,
+                         chunk=spec.chunk, interpret=spec.interpret)
     x, feas = x[:B], feas[:B, 0]
     return LPSolution(
         x=x,
         feasible=feas.astype(bool),
-        objective=jnp.einsum("bd,bd->b", batch.c.astype(x.dtype), x),
+        objective=jnp.einsum("bd,bd->b", pb.c.astype(x.dtype), x),
     )
 
 
@@ -96,17 +141,19 @@ class Solver:
 
     # -- composable entry point ------------------------------------------
 
-    def __call__(self, batch: LPBatch, key=None) -> LPSolution:
+    def __call__(self, batch: AnyLPBatch, key=None) -> LPSolution:
         """Pure function of ``(batch, key)`` — compose freely under an
         outer ``jax.jit`` / ``jax.vmap`` / ``jax.grad`` transform."""
         return solve_with_spec(self.spec, batch, key)
 
     # -- jit-cached host entry points ------------------------------------
 
-    def solve(self, batch: LPBatch, key=None) -> LPSolution:
-        """Solve one batch through the per-shape compile cache."""
-        self._shapes.add((batch.A.shape, str(batch.A.dtype),
-                          key is not None))
+    def solve(self, batch: AnyLPBatch, key=None) -> LPSolution:
+        """Solve one batch (AoS or packed) through the per-shape
+        compile cache."""
+        arr = batch.L if isinstance(batch, PackedLPBatch) else batch.A
+        self._shapes.add((type(batch).__name__, arr.shape,
+                          str(arr.dtype), key is not None))
         if key is None:
             return self._jit_plain(batch)
         return self._jit_keyed(batch, key)

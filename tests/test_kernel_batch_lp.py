@@ -63,12 +63,15 @@ def test_kernel_tile_sizes(tile):
 
 
 def test_pick_tile_vmem_budget():
-    # The full working set (constraints + c/mv inputs + x/feas outputs)
-    # must stay within the default 8MB budget
-    for m_pad in (128, 1024, 8192, 65536):
-        t = _pick_tile(m_pad)
-        assert t >= 8 and t % 8 == 0
-        assert t * (4 * m_pad + 6) * 4 <= 8 * 1024 * 1024 or t == 8
+    # The full working set (constraints + c input + x output at the
+    # solve dtype, plus int32 mv/feas) must stay within the default 8MB
+    # budget at every itemsize
+    for itemsize in (4, 8):
+        for m_pad in (128, 1024, 8192, 65536):
+            t = _pick_tile(m_pad, itemsize=itemsize)
+            assert t >= 8 and t % 8 == 0
+            working_set = t * ((4 * m_pad + 4) * itemsize + 8)
+            assert working_set <= 8 * 1024 * 1024 or t == 8
 
 
 def test_pick_tile_pinned():
@@ -83,6 +86,11 @@ def test_pick_tile_pinned():
     assert _pick_tile(128, 4) == 8
     assert _pick_tile(128, 1000) == 128
     assert _pick_tile(8192, 48) == 48
+    # float64 working sets are ~2x: tiles shrink instead of overshooting
+    # the VMEM budget (the old estimate hardcoded 4-byte elements)
+    assert _pick_tile(128, itemsize=8) == 128
+    assert _pick_tile(8192, itemsize=8) == 24
+    assert _pick_tile(65536, itemsize=8) == 8
 
 
 @settings(max_examples=10, deadline=None)

@@ -7,8 +7,9 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import (concat_batches, make_batch, pad_batch_dim,
-                        ragged_feasible_lp, solve_batch_lp, split_batch)
+from repro.core import (concat_batches, make_batch, pack_call_count,
+                        pad_batch_dim, ragged_feasible_lp, solve_batch_lp,
+                        split_batch)
 from repro.kernels import ops
 from repro.serve_lp import (BatchScheduler, ExecSpec, ExecutableCache,
                             ServeMetrics, SolverSpec, bucket_batch,
@@ -186,6 +187,56 @@ def test_manual_flush_and_pending():
     n = sched.flush()
     assert n == len(futs)
     assert all(f.done() for f in futs)
+
+
+# -- packed flush path ---------------------------------------------------
+
+@pytest.mark.parametrize("method,interpret", [("rgb", None),
+                                              ("kernel", True)])
+def test_flush_does_zero_repacks(method, interpret):
+    """The serving hot path assembles flushes directly in the packed SoA
+    layout: no AoS -> SoA conversion (core.packed.pack) may run during
+    submit, flush, or result scatter — on any backend."""
+    sched = BatchScheduler(method=method, max_batch=1000, tile=8,
+                           interpret=interpret)
+    reqs = _mixed_requests(reps=2)
+    n0 = pack_call_count()
+    futs = [sched.submit(*r) for r in reqs]
+    sched.flush()
+    for f in futs:
+        f.result(timeout=120.0)
+    # repeat flush on warm executables: still zero
+    futs = [sched.submit(*r) for r in reqs]
+    sched.flush()
+    for f in futs:
+        f.result(timeout=120.0)
+    assert pack_call_count() == n0, (
+        "serve_lp flush path performed an AoS->SoA repack")
+
+
+def test_submit_honors_spec_dtype():
+    """Request buffers are assembled at the spec's dtype end-to-end
+    (a float64 spec must not silently truncate through float32)."""
+    sched = BatchScheduler(SolverSpec(backend="rgb", tile=8))
+    req = _mixed_requests(ms=(5,), reps=1)[0]
+    sched.submit(np.asarray(req[0], np.float64), req[1], req[2])
+    q = next(iter(sched._queues.values()))
+    assert q[0].ax.dtype == np.float32 and q[0].b.dtype == np.float32
+    assert q[0].c.dtype == np.float32
+    sched.flush()
+    if jax.config.jax_enable_x64:
+        s64 = BatchScheduler(SolverSpec(backend="rgb", tile=8,
+                                        dtype="float64"))
+        s64.submit(*req)
+        q = next(iter(s64._queues.values()))
+        assert q[0].ax.dtype == np.float64
+        s64.flush()
+    else:
+        # x64 off: a float64 spec is rejected at construction, exactly
+        # like the solver's own check
+        with pytest.raises(ValueError, match="x64"):
+            BatchScheduler(SolverSpec(backend="rgb", tile=8,
+                                      dtype="float64"))
 
 
 # -- round trips ---------------------------------------------------------

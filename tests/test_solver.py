@@ -10,9 +10,10 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 import repro.core.seidel as seidel
-from repro.core import (LPBatch, infeasible_lp, make_batch,
-                        ragged_feasible_lp, random_feasible_lp,
-                        solve_batch_lp, split_batch)
+from repro.core import (LPBatch, adversarial_lp, infeasible_lp,
+                        make_batch, pack, ragged_feasible_lp,
+                        random_feasible_lp, solve_batch_lp, split_batch,
+                        unpack)
 from repro.solver import Solver, SolverSpec, get_solver, solve_with_spec
 
 TOL_5SIG = 5e-4  # the paper's 5-significant-figure comparison tolerance
@@ -272,6 +273,68 @@ def test_split_batch_rejects_silent_remainder():
         split_batch(lp, [5, 4])          # overflow still rejected
 
 
+# -- packed path: bit-identity against AoS --------------------------------
+
+def _satellite_batch(kind: str):
+    if kind == "adversarial":
+        return adversarial_lp(6, 24)
+    if kind == "infeasible":
+        return infeasible_lp(5, 12)
+    return ragged_feasible_lp(jax.random.key(13), 9, 21, m_min=2)
+
+
+@pytest.mark.parametrize("backend", ["naive", "rgb", "kernel"])
+@pytest.mark.parametrize("kind", ["adversarial", "infeasible", "ragged"])
+def test_packed_path_bit_identical(kind, backend):
+    """Solving a pre-packed batch must be *bit-identical* to solving the
+    AoS batch it came from, on every backend — the layout is a
+    representation change, not a numerical one."""
+    lp = _satellite_batch(kind)
+    spec = SolverSpec(backend=backend,
+                      interpret=True if backend == "kernel" else None)
+    solver = get_solver(spec)
+    aos = solver.solve(lp)
+    soa = solver.solve(pack(lp))
+    np.testing.assert_array_equal(np.asarray(aos.x), np.asarray(soa.x))
+    np.testing.assert_array_equal(np.asarray(aos.feasible),
+                                  np.asarray(soa.feasible))
+    np.testing.assert_array_equal(np.asarray(aos.objective),
+                                  np.asarray(soa.objective))
+
+
+def test_packed_path_bit_identical_with_shuffle():
+    """The packed shuffle draws the same permutation as the AoS one
+    (same key, same score shape), so bit-identity survives shuffling."""
+    lp = _satellite_batch("ragged")
+    spec = SolverSpec(backend="rgb", shuffle=True, seed=5)
+    aos = get_solver(spec).solve(lp)
+    soa = get_solver(spec).solve(pack(lp))
+    np.testing.assert_array_equal(np.asarray(aos.x), np.asarray(soa.x))
+    np.testing.assert_array_equal(np.asarray(aos.feasible),
+                                  np.asarray(soa.feasible))
+
+
+def test_padded_pack_shuffle_agrees_to_tolerance():
+    """Documented caveat: padding the constraint axis changes the shape
+    the shuffle scores are drawn from, so a bucket-padded pack is *not*
+    bit-identical under shuffle=True — but the optimum is
+    order-invariant, so objectives still agree to the paper's
+    tolerance (and without shuffle, padding preserves bit-identity)."""
+    lp = _satellite_batch("ragged")
+    shuf = SolverSpec(backend="rgb", shuffle=True, seed=5)
+    a = get_solver(shuf).solve(lp)
+    p = get_solver(shuf).solve(pack(lp, m_pad=128))
+    np.testing.assert_array_equal(np.asarray(a.feasible),
+                                  np.asarray(p.feasible))
+    np.testing.assert_allclose(np.asarray(a.objective),
+                               np.asarray(p.objective),
+                               rtol=TOL_5SIG, atol=TOL_5SIG)
+    plain = SolverSpec(backend="rgb")
+    np.testing.assert_array_equal(
+        np.asarray(get_solver(plain).solve(lp).x),
+        np.asarray(get_solver(plain).solve(pack(lp, m_pad=128)).x))
+
+
 # -- cross-backend equivalence property -----------------------------------
 
 _GENERATORS = ("random", "ragged", "infeasible")
@@ -294,6 +357,11 @@ def test_backends_agree_property(kind, seed, batch, m):
     feasibility and on the objective to the paper's 5-significant-figure
     tolerance, across random/ragged/infeasible generators."""
     lp = _gen_batch(kind, seed, batch, m)
+    # pack/unpack round-trip law: the packed layout is lossless
+    rt = unpack(pack(lp))
+    for f in ("A", "b", "c", "m_valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(rt, f)),
+                                      np.asarray(getattr(lp, f)))
     sweep = (
         SolverSpec(backend="naive", shuffle=True, seed=seed),
         SolverSpec(backend="rgb", shuffle=True, seed=seed),
