@@ -46,12 +46,16 @@ def run(full: bool = False):
         solver = spec.build()
         dt = time_fn(solver.solve, lp)
         sol = solver.solve(lp)
+        # Report the geometry the solve actually ran (unset tile/chunk
+        # are pinned per shape by the table/heuristic), not the spec's
+        # None sentinels — the trajectory row must name its launch.
+        ran = spec.resolve_for_shape(m, B)
         row = {
             "bench": "solver_sweep",
             "label": label,
-            "backend": solver.spec.backend,
-            "tile": solver.spec.tile,
-            "chunk": solver.spec.chunk,
+            "backend": ran.backend,
+            "tile": ran.tile,
+            "chunk": ran.chunk,
             "batch": B,
             "m": m,
             "seconds": dt,

@@ -27,7 +27,9 @@ from repro.core.packed import (
     split_packed,
     unpack,
 )
-from repro.core.seidel import solve_batch_lp, solve_naive, solve_rgb
+from repro.core.seidel import (solve_batch_lp, solve_naive,
+                               solve_naive_packed, solve_rgb,
+                               solve_rgb_packed)
 
 __all__ = [
     "LPBatch", "LPSolution", "PackedLPBatch", "adversarial_lp",
@@ -36,5 +38,6 @@ __all__ = [
     "pad_batch", "pad_batch_dim", "pad_packed", "pad_packed_batch_dim",
     "ragged_feasible_lp", "random_feasible_lp", "replicated_lp",
     "shuffle_batch", "shuffle_packed", "split_batch", "split_packed",
-    "solve_batch_lp", "solve_naive", "solve_rgb", "unpack",
+    "solve_batch_lp", "solve_naive", "solve_naive_packed", "solve_rgb",
+    "solve_rgb_packed", "unpack",
 ]

@@ -32,22 +32,26 @@ EPS_FEAS = 1e-5    # feasibility slack (paper uses a 5-significant-figure
 EPS_TIE = 1e-9     # |c @ u| below this -> objective tie, use perpendicular
 
 
-def line_frame(a: jax.Array, b: jax.Array):
-    """Return (p0, u): point on the line a@x=b closest to the origin, and a
-    unit vector along the line.  ``a`` must be unit-norm."""
-    p0 = a * b[..., None]
-    u = jnp.stack([-a[..., 1], a[..., 0]], axis=-1)
-    return p0, u
+# The 1-D solve operates on constraint *component rows* (a_x, a_y, b)
+# — the packed SoA layout, and the same component arithmetic the
+# Pallas kernel body runs.  The dense solvers consume a PackedLPBatch
+# directly (no AoS round-trip inside the trace); the AoS entry points
+# slice their (…, m, 2) normals into rows and run the *identical*
+# graph, which is what makes packed-vs-AoS solves bit-identical by
+# construction.
+#
+# Shape convention: per-problem scalars (a_ix, b_i, cx, …) carry the
+# leading batch shape (…,); constraint rows carry one extra trailing
+# axis (…, H).  Broadcasting against rows happens via […, None] inside
+# these helpers.
 
-
-def sigma_bounds(A_prev, b_prev, p0, u, mask):
-    """Intersections of previous constraints with the line (the work units).
-
-    A_prev: (..., H, 2), b_prev: (..., H), p0/u: (..., 2), mask: (..., H)
-    Returns (t_lo, t_hi, parallel_infeasible) reduced over H.
-    """
-    denom = jnp.einsum("...hd,...d->...h", A_prev, u)
-    num = b_prev - jnp.einsum("...hd,...d->...h", A_prev, p0)
+def sigma_bounds_rows(ax_prev, ay_prev, b_prev, p0x, p0y, ux, uy, mask):
+    """Intersections of previous constraints with the line (the work
+    units): all rows (..., H), line frame components pre-expanded to
+    (..., 1).  Returns (t_lo, t_hi, parallel_infeasible) reduced over
+    H."""
+    denom = ax_prev * ux + ay_prev * uy
+    num = b_prev - (ax_prev * p0x + ay_prev * p0y)
     is_par = jnp.abs(denom) <= EPS_DENOM
     t = num / jnp.where(is_par, 1.0, denom)  # guarded divide
     big = jnp.asarray(jnp.finfo(t.dtype).max, t.dtype)
@@ -59,31 +63,41 @@ def sigma_bounds(A_prev, b_prev, p0, u, mask):
     return t_lo, t_hi, par_bad
 
 
-def choose_t(t_lo, t_hi, c, cperp, u):
+def choose_t_rows(t_lo, t_hi, cx, cy, cpx, cpy, ux, uy):
     """Pick the end of the feasible interval the (augmented) objective
-    prefers.  Ties on c@u are broken with the perpendicular objective so the
-    incremental optimum stays unique (required by Seidel's algorithm)."""
-    cu = jnp.einsum("...d,...d->...", c, u)
-    cpu = jnp.einsum("...d,...d->...", cperp, u)
-    pick_hi = jnp.where(
-        jnp.abs(cu) > EPS_TIE, cu > 0.0, cpu > 0.0
-    )
+    prefers.  Ties on c@u are broken with the perpendicular objective
+    so the incremental optimum stays unique (required by Seidel's
+    algorithm).  The one copy of the tie-break — the dense and chunked
+    re-solves must share it bit-for-bit."""
+    cu = cx * ux + cy * uy
+    cpu = cpx * ux + cpy * uy
+    pick_hi = jnp.where(jnp.abs(cu) > EPS_TIE, cu > 0.0, cpu > 0.0)
     return jnp.where(pick_hi, t_hi, t_lo)
 
 
-def resolve_on_line(a_i, b_i, A_prev, b_prev, c, cperp, mask):
-    """Full 1-D re-solve: new optimum on the line of the violated constraint.
-
-    Shapes (leading axes broadcast): a_i (..., 2), b_i (...,),
-    A_prev (..., H, 2), b_prev (..., H), mask (..., H).
-    Returns (x_new (..., 2), feasible (...,)).
-    """
-    p0, u = line_frame(a_i, b_i)
-    t_lo, t_hi, par_bad = sigma_bounds(A_prev, b_prev, p0, u, mask)
+def resolve_on_line_rows(a_ix, a_iy, b_i, ax_prev, ay_prev, b_prev,
+                         cx, cy, cpx, cpy, mask):
+    """The full 1-D re-solve on the line of violated constraint
+    ``(a_ix, a_iy, b_i)`` against prior constraint rows.  Returns
+    (x_new_x, x_new_y, feasible), each with the leading batch shape."""
+    p0x, p0y = a_ix * b_i, a_iy * b_i    # closest point to the origin
+    ux, uy = -a_iy, a_ix                 # unit direction along the line
+    t_lo, t_hi, par_bad = sigma_bounds_rows(
+        ax_prev, ay_prev, b_prev, p0x[..., None], p0y[..., None],
+        ux[..., None], uy[..., None], mask)
     feasible = (t_lo <= t_hi + EPS_FEAS) & ~par_bad
-    t = choose_t(t_lo, t_hi, c, cperp, u)
-    x_new = p0 + t[..., None] * u
-    return x_new, feasible
+    t = choose_t_rows(t_lo, t_hi, cx, cy, cpx, cpy, ux, uy)
+    return p0x + t * ux, p0y + t * uy, feasible
+
+
+def box_rows(M, dtype=jnp.float32):
+    """The four bounds x<=M, -x<=M, y<=M, -y<=M that make every
+    intermediate optimum finite and unique (paper section 2.1), as
+    component rows (bax, bay, bb)."""
+    bax = jnp.asarray([1.0, -1.0, 0.0, 0.0], dtype)
+    bay = jnp.asarray([0.0, 0.0, 1.0, -1.0], dtype)
+    bb = jnp.full((4,), M, dtype)
+    return bax, bay, bb
 
 
 def perp(c):

@@ -21,18 +21,30 @@ Two pure-JAX implementations with deliberately different execution shapes:
 
 The Pallas TPU kernel (kernels/batch_lp.py) implements the same algorithm as
 ``solve_rgb`` with explicit VMEM tiling; this module is its oracle.
+
+Both solvers consume constraints as *component rows* ``(a_x, a_y, b)``
+— the packed SoA layout — via the ``oneD.*_rows`` helpers (the same
+component arithmetic the Pallas kernel body runs).  A
+:class:`~repro.core.packed.PackedLPBatch` therefore feeds
+``solve_naive_packed``/``solve_rgb_packed`` directly, with no AoS
+round-trip inside the trace; the AoS entry points slice their
+``(…, m, 2)`` normals into rows and run the identical graph, so packed
+and AoS solves are bit-identical by construction.
 """
 from __future__ import annotations
 
 import functools
 import warnings
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import oneD
 from repro.core.lp import LPBatch, LPSolution
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from repro.core.packed import PackedLPBatch
 
 DEFAULT_M = 1.0e4  # box bound; "very large so as not to affect the optimum"
 
@@ -41,28 +53,31 @@ DEFAULT_M = 1.0e4  # box bound; "very large so as not to affect the optimum"
 # NaiveRGB: vmap of the scalar incremental algorithm
 # ---------------------------------------------------------------------------
 
-def _solve_one(A, b, c, m_valid, *, M):
-    """Scalar Seidel solve for one LP.  A (m,2), b (m,), c (2,)."""
-    m = A.shape[0]
-    dt = A.dtype
-    boxA, boxb = oneD.box_constraints(M, dt)
-    Aall = jnp.concatenate([boxA, A], axis=0)  # (m+4, 2)
-    ball = jnp.concatenate([boxb, b], axis=0)
+def _solve_one_rows(ax, ay, bb, c, m_valid, *, M):
+    """Scalar Seidel solve for one LP over constraint rows.
+    ax/ay/bb (m,), c (2,)."""
+    m = ax.shape[0]
+    dt = ax.dtype
+    bax, bay, bbb = oneD.box_rows(M, dt)
+    ax_all = jnp.concatenate([bax, ax])  # (m+4,)
+    ay_all = jnp.concatenate([bay, ay])
+    b_all = jnp.concatenate([bbb, bb])
     cperp = oneD.perp(c)
     x0 = oneD.box_corner(c, jnp.asarray(M, dt))
     h_idx = jnp.arange(m + 4)
 
     def body(i, carry):
         x, feas = carry
-        a_i, b_i = A[i], b[i]
+        a_ix, a_iy, b_i = ax[i], ay[i], bb[i]
         violated = feas & (i < m_valid) & (
-            jnp.dot(a_i, x) > b_i + oneD.EPS_FEAS)
+            a_ix * x[0] + a_iy * x[1] > b_i + oneD.EPS_FEAS)
         # Under vmap this re-solve is executed by every lane every step
         # (cond -> select): the divergence cost the paper's Fig. 1 shows.
         mask = h_idx < (i + 4)
-        x_new, feas_new = oneD.resolve_on_line(
-            a_i, b_i, Aall, ball, c, cperp, mask)
-        x = jnp.where(violated, x_new, x)
+        xn_x, xn_y, feas_new = oneD.resolve_on_line_rows(
+            a_ix, a_iy, b_i, ax_all, ay_all, b_all,
+            c[0], c[1], cperp[0], cperp[1], mask)
+        x = jnp.where(violated, jnp.stack([xn_x, xn_y]), x)
         feas = jnp.where(violated, feas & feas_new, feas)
         return x, feas
 
@@ -70,22 +85,35 @@ def _solve_one(A, b, c, m_valid, *, M):
     return x, feas
 
 
-def solve_naive(batch: LPBatch, *, M: float = DEFAULT_M) -> LPSolution:
+def _naive_from_rows(ax, ay, bb, c, m_valid, *, M) -> LPSolution:
     x, feas = jax.vmap(
-        functools.partial(_solve_one, M=M)
-    )(batch.A, batch.b, batch.c, batch.m_valid)
+        functools.partial(_solve_one_rows, M=M)
+    )(ax, ay, bb, c, m_valid)
     return LPSolution(x=x, feasible=feas,
-                      objective=jnp.einsum("bd,bd->b", batch.c, x))
+                      objective=jnp.einsum("bd,bd->b", c, x))
+
+
+def solve_naive(batch: LPBatch, *, M: float = DEFAULT_M) -> LPSolution:
+    return _naive_from_rows(batch.A[..., 0], batch.A[..., 1], batch.b,
+                            batch.c, batch.m_valid, M=M)
+
+
+def solve_naive_packed(pb: "PackedLPBatch", *,
+                       M: float = DEFAULT_M) -> LPSolution:
+    """The packed fast path: consume ``PackedLPBatch.L`` rows directly
+    (no AoS round-trip inside the trace)."""
+    return _naive_from_rows(pb.ax, pb.ay, pb.b, pb.c,
+                            pb.m_valid.reshape(-1), M=M)
 
 
 # ---------------------------------------------------------------------------
 # RGB: tile-cooperative work-unit execution
 # ---------------------------------------------------------------------------
 
-def _solve_tile(A, b, c, m_valid, *, M, chunk: int = 0):
-    """Solve a tile of T problems cooperatively.
+def _solve_tile_rows(ax, ay, bb, c, m_valid, *, M, chunk: int = 0):
+    """Solve a tile of T problems cooperatively over constraint rows.
 
-    A (T, m, 2), b (T, m), c (T, 2), m_valid (T,).
+    ax/ay/bb (T, m), c (T, 2), m_valid (T,).
 
     chunk > 0 enables the *chunked re-solve* (beyond-paper optimisation,
     EXPERIMENTS.md section Perf-LP): the 1-D LP at step i only touches the
@@ -93,26 +121,32 @@ def _solve_tile(A, b, c, m_valid, *, M, chunk: int = 0):
     work is O(i) like the serial algorithm, instead of O(m) dense.  The
     paper's WU count is i per re-solve; the dense variant pays m.
     """
-    T, m = A.shape[0], A.shape[1]
-    dt = A.dtype
-    boxA, boxb = oneD.box_constraints(M, dt)
-    Aall = jnp.concatenate([jnp.broadcast_to(boxA, (T, 4, 2)), A], axis=1)
-    ball = jnp.concatenate([jnp.broadcast_to(boxb, (T, 4)), b], axis=1)
+    T, m = ax.shape
+    dt = ax.dtype
+    bax, bay, bbb = oneD.box_rows(M, dt)
+    ax_all = jnp.concatenate(
+        [jnp.broadcast_to(bax, (T, 4)), ax], axis=1)  # (T, H)
+    ay_all = jnp.concatenate([jnp.broadcast_to(bay, (T, 4)), ay], axis=1)
+    b_all = jnp.concatenate([jnp.broadcast_to(bbb, (T, 4)), bb], axis=1)
     if chunk:
-        pad = (-Aall.shape[1]) % chunk
-        Aall = jnp.pad(Aall, ((0, 0), (0, pad), (0, 0)))
-        ball = jnp.pad(ball, ((0, 0), (0, pad)), constant_values=1.0)
-    H = Aall.shape[1]
+        pad = (-ax_all.shape[1]) % chunk
+        ax_all = jnp.pad(ax_all, ((0, 0), (0, pad)))
+        ay_all = jnp.pad(ay_all, ((0, 0), (0, pad)))
+        b_all = jnp.pad(b_all, ((0, 0), (0, pad)), constant_values=1.0)
+    H = ax_all.shape[1]
+    cx, cy = c[:, 0], c[:, 1]
     cperp = oneD.perp(c)
+    cpx, cpy = cperp[:, 0], cperp[:, 1]
     x0 = oneD.box_corner(c, jnp.asarray(M, dt))
     h_idx = jnp.arange(H)[None, :]  # (1, H)
 
     def step(i, carry):
         x, feas = carry
-        a_i = jax.lax.dynamic_index_in_dim(A, i, axis=1, keepdims=False)
-        b_i = jax.lax.dynamic_index_in_dim(b, i, axis=1, keepdims=False)
+        a_ix = jax.lax.dynamic_index_in_dim(ax, i, axis=1, keepdims=False)
+        a_iy = jax.lax.dynamic_index_in_dim(ay, i, axis=1, keepdims=False)
+        b_i = jax.lax.dynamic_index_in_dim(bb, i, axis=1, keepdims=False)
         violated = feas & (i < m_valid) & (
-            jnp.einsum("td,td->t", a_i, x) > b_i + oneD.EPS_FEAS)
+            a_ix * x[:, 0] + a_iy * x[:, 1] > b_i + oneD.EPS_FEAS)
 
         def resolve(xf):
             x, feas = xf
@@ -121,11 +155,14 @@ def _solve_tile(A, b, c, m_valid, *, M, chunk: int = 0):
             # replaces shared-memory atomics.
             if not chunk:
                 mask = h_idx < (i + 4)
-                x_new, feas_new = oneD.resolve_on_line(
-                    a_i, b_i, Aall, ball, c, cperp, mask)
+                xn_x, xn_y, feas_new = oneD.resolve_on_line_rows(
+                    a_ix, a_iy, b_i, ax_all, ay_all, b_all,
+                    cx, cy, cpx, cpy, mask)
             else:
-                x_new, feas_new = _resolve_chunked(
-                    a_i, b_i, Aall, ball, c, cperp, i + 4, chunk)
+                xn_x, xn_y, feas_new = _resolve_chunked_rows(
+                    a_ix, a_iy, b_i, ax_all, ay_all, b_all,
+                    cx, cy, cpx, cpy, i + 4, chunk)
+            x_new = jnp.stack([xn_x, xn_y], axis=-1)
             x = jnp.where(violated[:, None], x_new, x)
             feas = jnp.where(violated, feas & feas_new, feas)
             return x, feas
@@ -138,21 +175,29 @@ def _solve_tile(A, b, c, m_valid, *, M, chunk: int = 0):
     return x, feas
 
 
-def _resolve_chunked(a_i, b_i, Aall, ball, c, cperp, n_prior, chunk):
+def _resolve_chunked_rows(a_ix, a_iy, b_i, ax_all, ay_all, b_all,
+                          cx, cy, cpx, cpy, n_prior, chunk):
     """1-D re-solve touching only ceil(n_prior/chunk) lane-chunks."""
-    T, H, _ = Aall.shape
-    dt = Aall.dtype
-    p0, u = oneD.line_frame(a_i, b_i)
+    T, H = ax_all.shape
+    dt = ax_all.dtype
+    p0x, p0y = a_ix * b_i, a_iy * b_i
+    ux, uy = -a_iy, a_ix
     big = jnp.asarray(jnp.finfo(dt).max, dt)
     n_chunks = (n_prior + chunk - 1) // chunk
 
     def body(j, carry):
         t_lo, t_hi, bad = carry
-        As = jax.lax.dynamic_slice_in_dim(Aall, j * chunk, chunk, axis=1)
-        bs = jax.lax.dynamic_slice_in_dim(ball, j * chunk, chunk, axis=1)
+        axc = jax.lax.dynamic_slice_in_dim(ax_all, j * chunk, chunk,
+                                           axis=1)
+        ayc = jax.lax.dynamic_slice_in_dim(ay_all, j * chunk, chunk,
+                                           axis=1)
+        bsc = jax.lax.dynamic_slice_in_dim(b_all, j * chunk, chunk,
+                                           axis=1)
         hloc = j * chunk + jnp.arange(chunk)[None, :]
         mask = hloc < n_prior
-        lo_j, hi_j, bad_j = oneD.sigma_bounds(As, bs, p0, u, mask)
+        lo_j, hi_j, bad_j = oneD.sigma_bounds_rows(
+            axc, ayc, bsc, p0x[..., None], p0y[..., None],
+            ux[..., None], uy[..., None], mask)
         return (jnp.maximum(t_lo, lo_j), jnp.minimum(t_hi, hi_j),
                 bad | bad_j)
 
@@ -162,13 +207,12 @@ def _resolve_chunked(a_i, b_i, Aall, ball, c, cperp, n_prior, chunk):
     t_lo, t_hi, bad = jax.lax.fori_loop(0, n_chunks, body,
                                         (t_lo0, t_hi0, bad0))
     feasible = (t_lo <= t_hi + oneD.EPS_FEAS) & ~bad
-    t = oneD.choose_t(t_lo, t_hi, c, cperp, u)
-    return p0 + t[..., None] * u, feasible
+    t = oneD.choose_t_rows(t_lo, t_hi, cx, cy, cpx, cpy, ux, uy)
+    return p0x + t * ux, p0y + t * uy, feasible
 
 
-def solve_rgb(batch: LPBatch, *, M: float = DEFAULT_M,
-              tile: int = 32, chunk: int = 0) -> LPSolution:
-    B, m = batch.batch, batch.m
+def _rgb_from_rows(ax, ay, bb, c, m_valid, *, M, tile, chunk) -> LPSolution:
+    B, m = ax.shape
     T = min(tile, B) if B > 0 else tile
     n_tiles = -(-B // T)
     pad = n_tiles * T - B
@@ -179,21 +223,39 @@ def solve_rgb(batch: LPBatch, *, M: float = DEFAULT_M,
         width = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
         return jnp.pad(a, width, constant_values=fill)
 
-    A = padded(batch.A, 0.0).reshape(n_tiles, T, m, 2)
-    b = padded(batch.b, 1.0).reshape(n_tiles, T, m)
-    c = padded(batch.c, 1.0).reshape(n_tiles, T, 2)
-    mv = padded(batch.m_valid, 0).reshape(n_tiles, T)
+    axs = padded(ax, 0.0).reshape(n_tiles, T, m)
+    ays = padded(ay, 0.0).reshape(n_tiles, T, m)
+    bs = padded(bb, 1.0).reshape(n_tiles, T, m)
+    cs = padded(c, 1.0).reshape(n_tiles, T, 2)
+    mv = padded(m_valid, 0).reshape(n_tiles, T)
 
     def scan_body(_, xs):
-        Ai, bi, ci, mvi = xs
-        x, feas = _solve_tile(Ai, bi, ci, mvi, M=M, chunk=chunk)
+        axi, ayi, bi, ci, mvi = xs
+        x, feas = _solve_tile_rows(axi, ayi, bi, ci, mvi, M=M,
+                                   chunk=chunk)
         return None, (x, feas)
 
-    _, (x, feas) = jax.lax.scan(scan_body, None, (A, b, c, mv))
+    _, (x, feas) = jax.lax.scan(scan_body, None, (axs, ays, bs, cs, mv))
     x = x.reshape(n_tiles * T, 2)[:B]
     feas = feas.reshape(n_tiles * T)[:B]
     return LPSolution(x=x, feasible=feas,
-                      objective=jnp.einsum("bd,bd->b", batch.c, x))
+                      objective=jnp.einsum("bd,bd->b", c, x))
+
+
+def solve_rgb(batch: LPBatch, *, M: float = DEFAULT_M,
+              tile: int = 32, chunk: int = 0) -> LPSolution:
+    return _rgb_from_rows(batch.A[..., 0], batch.A[..., 1], batch.b,
+                          batch.c, batch.m_valid, M=M, tile=tile,
+                          chunk=chunk)
+
+
+def solve_rgb_packed(pb: "PackedLPBatch", *, M: float = DEFAULT_M,
+                     tile: int = 32, chunk: int = 0) -> LPSolution:
+    """The packed fast path: consume ``PackedLPBatch.L`` rows directly
+    (no AoS round-trip inside the trace)."""
+    return _rgb_from_rows(pb.ax, pb.ay, pb.b, pb.c,
+                          pb.m_valid.reshape(-1), M=M, tile=tile,
+                          chunk=chunk)
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,10 @@ from typing import Callable, Dict, List
 
 from repro.kernels.batch_lp import LANE
 from repro.solver import SolverSpec
+# One ladder implementation serves serving buckets *and* tuning-table
+# shape classes — their alignment is what makes table lookups for a
+# flush's bucket land on the entries the tuner recorded.
+from repro.tune.table import bucket_pow2
 
 
 def bucket_m(m: int, *, base: int = LANE) -> int:
@@ -33,10 +37,7 @@ def bucket_m(m: int, *, base: int = LANE) -> int:
     {base, 2*base, 4*base, ...}."""
     if m < 1:
         raise ValueError(f"m={m} < 1")
-    b = base
-    while b < m:
-        b *= 2
-    return b
+    return bucket_pow2(m, base)
 
 
 def bucket_batch(batch: int, unit: int) -> int:
@@ -44,10 +45,7 @@ def bucket_batch(batch: int, unit: int) -> int:
     multiples {unit, 2*unit, 4*unit, ...}."""
     if batch < 1:
         raise ValueError(f"batch={batch} < 1")
-    b = unit
-    while b < batch:
-        b *= 2
-    return b
+    return bucket_pow2(batch, unit)
 
 
 def shape_ladder(m_max: int, *, base: int = LANE) -> List[int]:

@@ -19,9 +19,22 @@ There is no AoS intermediate and no device-side repack: the executable
 consumes ``(L, c, mv)`` as assembled (``core.pack_call_count`` stays
 flat across flushes).  Solver failures propagate to every future of the
 flush via ``set_exception``.
+
+Two per-flush costs are engineered away:
+
+* *launch geometry* — specs with unset ``tile``/``chunk`` are pinned
+  **per bucket shape** via
+  :meth:`~repro.solver.SolverSpec.resolve_for_shape` (explicit >
+  measured tuning table > heuristic), so each bucket's executable runs
+  the geometry measured best for its shape class;
+* *host allocation* — the packed flush buffers come from a per-bucket
+  :class:`_FlushBufferPool` and are reused across flushes (steady-state
+  traffic on a stable bucket performs zero buffer allocations; the pool
+  counts allocations so tests can assert it).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -40,8 +53,71 @@ from repro.serve_lp.sharding import build_executable
 from repro.solver import SolverSpec
 
 # Serving needs a concrete tile for its b_pad ladder; specs built with
-# tile=None get this (the historical scheduler default).
+# tile=None and no tuning-table entry for the flush shape get this (the
+# historical scheduler default).
 DEFAULT_SERVE_TILE = 32
+
+
+class _FlushBufferPool:
+    """Reuse the host-side packed flush buffers across flushes.
+
+    One flush needs ``L (b_pad, 4, bm)``, ``c (b_pad, 2)`` and
+    ``mv (b_pad, 1)``; allocating them fresh per flush was the last
+    per-flush cost on the serving hot path.  ``lease`` hands out a
+    zeroed buffer set for a shape (reusing a previously returned one
+    when available — steady-state traffic on a stable bucket allocates
+    exactly once) and takes it back afterwards.  Concurrent flushes of
+    the same shape (timer thread + inline size trigger) each get their
+    own set; at most ``max_per_key`` sets are retained per shape.
+
+    Returning the buffers *after* the executable has run is safe: the
+    built executables are synchronous (they return host numpy arrays),
+    so the device is done with the transferred inputs by then.
+    """
+
+    def __init__(self, max_per_key: int = 2):
+        self._free: Dict[tuple, List[tuple]] = {}
+        self._lock = threading.Lock()
+        self._max_per_key = max_per_key
+        self.alloc_count = 0   # fresh allocations (tests assert reuse)
+        self.lease_count = 0
+
+    def _take(self, key):
+        with self._lock:
+            self.lease_count += 1
+            stack = self._free.get(key)
+            if stack:
+                return stack.pop()
+        return None
+
+    def _give(self, key, bufs) -> None:
+        with self._lock:
+            stack = self._free.setdefault(key, [])
+            if len(stack) < self._max_per_key:
+                stack.append(bufs)
+
+    @contextlib.contextmanager
+    def lease(self, b_pad: int, bm: int, dtype: np.dtype):
+        key = (b_pad, bm, np.dtype(dtype).str)
+        bufs = self._take(key)
+        if bufs is None:
+            with self._lock:
+                self.alloc_count += 1
+            bufs = (np.empty((b_pad, 4, bm), dtype),
+                    np.empty((b_pad, 2), dtype),
+                    np.empty((b_pad, 1), np.int32))
+        L, c, mv = bufs
+        # Reset to the neutral flush background: padding columns and
+        # problems must look exactly like freshly zeroed buffers.
+        L.fill(0.0)
+        L[:, 2, :] = PAD_B
+        c[:, 0] = 1.0
+        c[:, 1] = 0.0
+        mv.fill(0)
+        try:
+            yield L, c, mv
+        finally:
+            self._give(key, bufs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,8 +157,12 @@ class BatchScheduler:
         It becomes part of each flush's :class:`ExecSpec` cache key, so
         two schedulers with different specs can never alias
         executables.  ``backend="auto"``/``interpret=None`` resolve
-        against the running JAX backend; ``tile=None`` gets the serving
-        default (32).
+        against the running JAX backend at construction (the m-bucket
+        ladder depends on the backend, so auto cannot stay
+        shape-dependent here — pass an explicit backend to choose);
+        ``tile=None``/``chunk=None`` are pinned per bucket shape at
+        flush time (measured tuning table first, then the serving
+        default tile of 32).
     method, tile, chunk, M, normalize, interpret:
         deprecated flag-bag alternative to ``spec`` (mapped onto an
         equivalent SolverSpec; passing both is an error).
@@ -136,8 +216,10 @@ class BatchScheduler:
                 "per-request results would depend on flush composition; "
                 "pre-shuffle requests client-side if randomised order is "
                 "needed")
-        if spec.tile is None:
-            spec = dataclasses.replace(spec, tile=DEFAULT_SERVE_TILE)
+        # tile/chunk left unset stay unset here: they are pinned *per
+        # bucket shape* at flush time (resolve_for_shape: explicit >
+        # tuning table > heuristic), so different buckets can run the
+        # geometry measured best for their shape class.
         self.spec = spec
         # Request buffers are assembled host-side at the solve dtype, so
         # a float64 spec is not silently truncated to float32 on submit.
@@ -155,6 +237,7 @@ class BatchScheduler:
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.cache = ExecutableCache(
             lambda s: build_executable(s, self._devices))
+        self.buffers = _FlushBufferPool()
         self._queues: Dict[int, List[_Pending]] = {}
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
@@ -168,11 +251,12 @@ class BatchScheduler:
 
     @property
     def tile(self) -> int:
-        return self.spec.tile
+        return (self.spec.tile if self.spec.tile is not None
+                else DEFAULT_SERVE_TILE)
 
     @property
     def chunk(self) -> int:
-        return self.spec.chunk
+        return 0 if self.spec.chunk is None else self.spec.chunk
 
     @property
     def M(self) -> float:
@@ -192,8 +276,16 @@ class BatchScheduler:
 
     @property
     def batch_unit(self) -> int:
-        """Flush sizes pad to multiples of this (tile per device)."""
+        """Fallback flush-padding unit (tile per device).  Buckets whose
+        pinned tile differs (tuned entries) pad on their own unit."""
         return self.tile * len(self._devices)
+
+    def _pin_for_bucket(self, bm: int, batch: int) -> SolverSpec:
+        """The fully shape-resolved spec one bucket's flush runs with:
+        explicit spec values win, then the measured tuning table at
+        this bucket's shape class, then the defaults (the dense
+        heuristic tile doubles as the historical serving default)."""
+        return self.spec.resolve_for_shape(bm, batch)
 
     # -- submission ------------------------------------------------------
 
@@ -311,31 +403,28 @@ class BatchScheduler:
 
     def _solve(self, bm: int, reqs: List[_Pending], *, reason: str) -> None:
         B = len(reqs)
-        b_pad = bucket_batch(B, self.batch_unit)
+        pinned = self._pin_for_bucket(bm, B)
+        b_pad = bucket_batch(B, pinned.tile * len(self._devices))
         # Host-side numpy twin of core.packed: the flush is assembled
         # *directly* into the packed (b_pad, 4, bm) block — neutral
         # columns/problems are a_x = a_y = 0, b = PAD_B, c = (1, 0),
         # m_valid = 0 — so the executable consumes it as-is: no AoS
-        # intermediate, no device-side re-stack.
-        dt = self._dtype
-        L = np.zeros((b_pad, 4, bm), dt)
-        L[:, 2, :] = PAD_B
-        c = np.broadcast_to(np.asarray([1.0, 0.0], dt),
-                            (b_pad, 2)).copy()
-        mv = np.zeros((b_pad, 1), np.int32)
-        for i, r in enumerate(reqs):
-            L[i, 0, :r.m] = r.ax
-            L[i, 1, :r.m] = r.ay
-            L[i, 2, :r.m] = r.b
-            c[i] = r.c
-            mv[i, 0] = r.m
-        spec = ExecSpec(bucket_m=bm, b_pad=b_pad, solver=self.spec,
+        # intermediate, no device-side re-stack.  The buffers are
+        # leased from the per-bucket pool (reused across flushes).
+        spec = ExecSpec(bucket_m=bm, b_pad=b_pad, solver=pinned,
                         n_devices=len(self._devices))
         try:
-            fn = self.cache.get(spec)
-            t0 = time.perf_counter()
-            x, feas = fn(L, c, mv)
-            dt_solve = time.perf_counter() - t0
+            with self.buffers.lease(b_pad, bm, self._dtype) as (L, c, mv):
+                for i, r in enumerate(reqs):
+                    L[i, 0, :r.m] = r.ax
+                    L[i, 1, :r.m] = r.ay
+                    L[i, 2, :r.m] = r.b
+                    c[i] = r.c
+                    mv[i, 0] = r.m
+                fn = self.cache.get(spec)
+                t0 = time.perf_counter()
+                x, feas = fn(L, c, mv)
+                dt_solve = time.perf_counter() - t0
         except Exception as e:  # propagate to every waiter, don't hang
             for r in reqs:
                 r.future.set_exception(e)

@@ -20,6 +20,11 @@ One operation, many LPs, every backend::
 static ``jax.jit`` argument or as an executable-cache key (the serving
 layer's ``ExecSpec`` embeds one).  ``core.solve_batch_lp`` remains as a
 deprecated shim over this module.
+
+Launch geometry left unset (``tile``/``chunk`` ``None``) is pinned per
+input shape with the precedence *explicit > measured tuning table >
+heuristic* (see :mod:`repro.tune` and
+:meth:`SolverSpec.resolve_for_shape`).
 """
 from repro.solver.solver import Solver, solve_with_spec
 from repro.solver.spec import (BACKENDS, DEFAULT_M, SolverSpec,

@@ -18,16 +18,22 @@ problem, every backend, bit-for-bit comparable" a one-liner.
 Both entry points accept either constraint layout: the AoS
 :class:`~repro.core.lp.LPBatch` or the packed SoA
 :class:`~repro.core.packed.PackedLPBatch`.  A packed batch stays packed
-end-to-end — normalise/shuffle run in their packed-native forms and the
-kernel backend consumes ``L`` directly; the dense backends unpack at
-the solver boundary (inside the trace, fused by XLA) because their
-algorithms are written against the AoS view.  Since both layouts run
-the identical scalar pipeline, ``solve(pack(batch))`` is bit-identical
-to ``solve(batch)``.  (One caveat: padding the constraint axis — in
-*either* layout — changes the score shape ``shuffle`` draws from, so
-for ``shuffle=True`` specs the identity needs matching ``m``; a padded
-batch still agrees on the optimum to the usual tolerance, just not
-bit-for-bit.)
+end-to-end — normalise/shuffle run in their packed-native forms, the
+kernel backend consumes ``L`` directly, and the dense backends consume
+the ``L`` component rows directly too (``seidel.solve_*_packed``; no
+AoS round-trip anywhere in the trace).  The AoS entry slices its
+normals into the same rows, so both layouts run the identical graph
+and ``solve(pack(batch))`` is bit-identical to ``solve(batch)``.  (One
+caveat: padding the constraint axis — in *either* layout — changes the
+score shape ``shuffle`` draws from, so for ``shuffle=True`` specs the
+identity needs matching ``m``; a padded batch still agrees on the
+optimum to the usual tolerance, just not bit-for-bit.)
+
+Launch geometry left unset on the spec (``tile``/``chunk`` ``None``)
+is pinned here per input shape via
+:meth:`~repro.solver.spec.SolverSpec.resolve_for_shape` — explicit
+values win, then the measured :mod:`repro.tune` table for this device,
+then the static heuristics.
 """
 from __future__ import annotations
 
@@ -40,8 +46,9 @@ from repro.core.lp import (LPBatch, LPSolution, normalize_batch,
                            shuffle_batch)
 from repro.core.packed import (PackedLPBatch, normalize_packed, pack,
                                pad_packed, pad_packed_batch_dim,
-                               shuffle_packed, unpack)
-from repro.core.seidel import solve_naive, solve_rgb
+                               shuffle_packed)
+from repro.core.seidel import (solve_naive, solve_naive_packed, solve_rgb,
+                               solve_rgb_packed)
 from repro.solver.spec import RGB_DEFAULT_TILE, SolverSpec
 
 AnyLPBatch = Union[LPBatch, PackedLPBatch]
@@ -56,11 +63,13 @@ def solve_with_spec(spec: SolverSpec, batch: AnyLPBatch,
     ``key=None`` the batch is shuffled iff ``spec.shuffle`` (keyed by
     ``spec.seed``).
     """
-    spec = spec.resolve()
+    is_packed = isinstance(batch, PackedLPBatch)
+    m = batch.m_pad if is_packed else batch.m
+    spec = spec.resolve_for_shape(m, batch.batch)
     dt = jnp.dtype(spec.dtype)
     if key is None and spec.shuffle:
         key = jax.random.key(spec.seed)
-    if isinstance(batch, PackedLPBatch):
+    if is_packed:
         return _solve_packed(spec, batch, dt, key)
     # Cast each array (astype is the identity when already dt): A alone
     # matching must not let a mixed-dtype b or c leak through.
@@ -78,8 +87,8 @@ def solve_with_spec(spec: SolverSpec, batch: AnyLPBatch,
 def _solve_packed(spec: SolverSpec, pb: PackedLPBatch, dt,
                   key) -> LPSolution:
     """The packed-native pipeline: cast -> normalise -> shuffle without
-    leaving the SoA layout, then hand ``L`` to the kernel directly (the
-    dense backends unpack at the boundary — their adapters)."""
+    leaving the SoA layout, then hand the ``L`` rows straight to the
+    backend (kernel and dense alike — no unpack in the trace)."""
     pb = PackedLPBatch(L=pb.L.astype(dt), c=pb.c.astype(dt),
                        m_valid=pb.m_valid)
     if spec.normalize:
@@ -88,7 +97,11 @@ def _solve_packed(spec: SolverSpec, pb: PackedLPBatch, dt,
         pb = shuffle_packed(key, pb)
     if spec.backend == "kernel":
         return _solve_kernel(spec, pb)
-    return _solve_dense(spec, unpack(pb))
+    if spec.backend == "naive":
+        return solve_naive_packed(pb, M=spec.M)
+    return solve_rgb_packed(pb, M=spec.M,
+                            tile=spec.tile or RGB_DEFAULT_TILE,
+                            chunk=spec.chunk or 0)
 
 
 def _solve_dense(spec: SolverSpec, batch: LPBatch) -> LPSolution:
@@ -96,7 +109,7 @@ def _solve_dense(spec: SolverSpec, batch: LPBatch) -> LPSolution:
         return solve_naive(batch, M=spec.M)
     return solve_rgb(batch, M=spec.M,
                      tile=spec.tile or RGB_DEFAULT_TILE,
-                     chunk=spec.chunk)
+                     chunk=spec.chunk or 0)
 
 
 def _solve_kernel(spec: SolverSpec, pb: PackedLPBatch) -> LPSolution:
@@ -130,13 +143,22 @@ class Solver:
         if not isinstance(spec, SolverSpec):
             raise TypeError(f"expected SolverSpec, got {type(spec)!r}")
         self.spec = spec.resolve()
+        # ``backend="auto"`` stays "auto" on the *solving* spec so each
+        # input shape can pick the fastest measured backend from the
+        # tuning table at trace time (``self.spec`` above is the
+        # introspection view and the choice on a table miss).  Note the
+        # process-wide :func:`~repro.solver.spec.get_solver` cache keys
+        # on the resolved spec, so it pins "auto" to the platform
+        # default; build a Solver via ``spec.build()`` to keep the
+        # shape-dependent behaviour.
+        self._solve_spec = spec if spec.backend == "auto" else self.spec
         # jax.jit itself caches one compile per input shape/dtype; one
         # persistent wrapper per calling convention is all we need.
         # _shapes only tracks the distinct entries for introspection.
         self._jit_plain = jax.jit(
-            lambda b: solve_with_spec(self.spec, b))
+            lambda b: solve_with_spec(self._solve_spec, b))
         self._jit_keyed = jax.jit(
-            lambda b, k: solve_with_spec(self.spec, b, k))
+            lambda b, k: solve_with_spec(self._solve_spec, b, k))
         self._shapes = set()
 
     # -- composable entry point ------------------------------------------
@@ -144,7 +166,7 @@ class Solver:
     def __call__(self, batch: AnyLPBatch, key=None) -> LPSolution:
         """Pure function of ``(batch, key)`` — compose freely under an
         outer ``jax.jit`` / ``jax.vmap`` / ``jax.grad`` transform."""
-        return solve_with_spec(self.spec, batch, key)
+        return solve_with_spec(self._solve_spec, batch, key)
 
     # -- jit-cached host entry points ------------------------------------
 

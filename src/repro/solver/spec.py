@@ -15,6 +15,16 @@ The *shuffle policy* lives in the spec rather than in a per-call kwarg:
 solve, keyed by ``seed`` unless the caller passes an explicit key.  A
 key passed at call time always wins, so ``shuffle=False`` specs can
 still opt in per call (the old ``key=`` behaviour).
+
+Launch geometry (``tile``/``chunk``) is resolved in two stages.
+:meth:`resolve` pins only environment-dependent fields (backend,
+interpret) and leaves unset geometry as the sentinel ``None``;
+:meth:`resolve_for_shape` — called wherever the input shape is known
+(the solve core, the serving scheduler's per-bucket flush) — pins it
+with the precedence **explicit > tuning table > heuristic**: values the
+user set always win, otherwise the measured
+:class:`repro.tune.TuningTable` for this device is consulted, and a
+table miss falls back to the static defaults (never an error).
 """
 from __future__ import annotations
 
@@ -33,10 +43,17 @@ DEFAULT_M = 1.0e4
 BACKENDS = ("naive", "rgb", "kernel", "auto")
 DTYPES = ("float32", "float64")
 
-# Backend-default tiles when ``tile=None``: the pure-JAX cooperative
-# solver uses the paper-faithful warp-sized tile; the Pallas kernel
-# picks a VMEM-budgeted tile per input shape at solve time.
+# Backend-default tiles when ``tile=None`` and the tuning table has no
+# entry: the pure-JAX cooperative solver uses the paper-faithful
+# warp-sized tile; the Pallas kernel picks a VMEM-budgeted tile per
+# input shape at solve time.
 RGB_DEFAULT_TILE = 32
+
+_DTYPE_ITEMSIZE = {"float32": 4, "float64": 8}
+
+
+def jnp_itemsize(dtype: str) -> int:
+    return _DTYPE_ITEMSIZE[dtype]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,11 +68,14 @@ class SolverSpec:
         or ``"auto"`` (kernel on TPU, rgb elsewhere — resolved against
         the running JAX backend by :meth:`resolve`/:meth:`build`).
     tile:
-        problems per cooperative tile.  ``None`` means the backend
-        default: 32 for ``rgb``, a VMEM-budgeted per-shape choice for
-        ``kernel``; ignored by ``naive``.
+        problems per cooperative tile.  ``None`` means "pick per
+        shape": the measured tuning table when it has an entry,
+        otherwise the backend default (32 for ``rgb``, a VMEM-budgeted
+        choice for ``kernel``); ignored by ``naive``.
     chunk:
-        lane-chunk size for the chunked O(i) re-solve (0 = dense).
+        lane-chunk size for the chunked O(i) re-solve.  ``None`` means
+        "pick per shape" (table, then the dense default); ``0``
+        explicitly requests the dense re-solve.
     M:
         box bound on both coordinates (must not bind at the optimum).
     normalize:
@@ -77,7 +97,7 @@ class SolverSpec:
 
     backend: str = "auto"
     tile: Optional[int] = None
-    chunk: int = 0
+    chunk: Optional[int] = None
     M: float = DEFAULT_M
     normalize: bool = True
     shuffle: bool = False
@@ -94,8 +114,10 @@ class SolverSpec:
                                       or self.tile < 1):
             raise ValueError(f"tile={self.tile!r} must be a positive int "
                              "or None")
-        if not isinstance(self.chunk, int) or self.chunk < 0:
-            raise ValueError(f"chunk={self.chunk!r} must be an int >= 0")
+        if self.chunk is not None and (not isinstance(self.chunk, int)
+                                       or self.chunk < 0):
+            raise ValueError(f"chunk={self.chunk!r} must be an int >= 0 "
+                             "or None")
         M = float(self.M)
         if not M > 0.0:
             raise ValueError(f"M={self.M!r} must be > 0")
@@ -122,11 +144,11 @@ class SolverSpec:
         Environment-dependent choices (``backend="auto"``,
         ``interpret=None``) become concrete; fields that cannot affect
         execution are pinned (``interpret`` off the kernel backend,
-        ``seed`` when ``shuffle=False``, the rgb default ``tile``), so
-        specs with identical execution plans resolve equal and share
-        executable-cache entries.  The kernel backend keeps
-        ``tile=None`` — there it means "pick a VMEM-budgeted tile per
-        shape".
+        ``seed`` when ``shuffle=False``), so specs with identical
+        execution plans resolve equal and share executable-cache
+        entries.  Unset launch geometry (``tile=None``/``chunk=None``)
+        stays the sentinel — it means "pick per shape" and is pinned by
+        :meth:`resolve_for_shape` where the input shape is known.
         """
         platform = platform or jax.default_backend()
         if self.dtype == "float64" and not jax.config.jax_enable_x64:
@@ -142,16 +164,87 @@ class SolverSpec:
                          else bool(self.interpret))
         else:
             interpret = False
-        tile = self.tile
-        if backend == "rgb" and tile is None:
-            tile = RGB_DEFAULT_TILE
         seed = self.seed if self.shuffle else 0
         if (backend == self.backend and interpret == self.interpret
-                and tile == self.tile and seed == self.seed):
+                and seed == self.seed):
             return self
         return dataclasses.replace(self, backend=backend,
-                                   interpret=interpret, tile=tile,
-                                   seed=seed)
+                                   interpret=interpret, seed=seed)
+
+    @property
+    def is_shape_resolved(self) -> bool:
+        """True once launch geometry is concrete as well."""
+        return (self.is_resolved and self.tile is not None
+                and self.chunk is not None)
+
+    def resolve_for_shape(self, m: int, batch: Optional[int] = None,
+                          platform: Optional[str] = None) -> "SolverSpec":
+        """Fully pin the spec for one input shape: environment choices
+        via :meth:`resolve`, then launch geometry with the precedence
+        **explicit > tuning table > heuristic**.
+
+        ``m`` is the (padded) constraint count of the batch, ``batch``
+        its problem count (``None`` if unknown — table lookups then use
+        the batch-wildcard rung).  For ``backend="auto"`` the measured
+        table may also pick the backend: the fastest recorded backend
+        at this shape wins over the platform default when measurements
+        exist.  A table miss — or the table being unavailable for any
+        reason — falls back to today's static heuristics; this method
+        never raises on tuning problems.
+        """
+        from repro.kernels.batch_lp import LANE, _pick_tile  # deferred
+        try:
+            from repro.tune.table import active_table
+            table = active_table()
+        except Exception:   # tuning must never take the solver down
+            table = None
+        spec = self
+        if spec.backend == "auto" and table is not None:
+            try:
+                best = table.lookup_best_backend(dtype=spec.dtype, m=m,
+                                                 batch=batch)
+            except Exception:
+                best = None
+            if best is not None:
+                spec = dataclasses.replace(
+                    spec, backend=best.key.backend)
+        spec = spec.resolve(platform)
+        if spec.is_shape_resolved:
+            return spec
+        tile, chunk = spec.tile, spec.chunk
+        entry = None
+        if table is not None and (tile is None or chunk is None):
+            try:
+                entry = table.lookup(backend=spec.backend,
+                                     dtype=spec.dtype, m=m, batch=batch)
+            except Exception:
+                entry = None
+        if entry is not None:
+            if tile is None:
+                tile = entry.tile
+            if chunk is None:
+                chunk = entry.chunk
+        # Heuristic floor: exactly the pre-tuning behaviour.
+        m_lane = -(-m // LANE) * LANE
+        if tile is None:
+            if spec.backend == "kernel":
+                tile = _pick_tile(m_lane, batch,
+                                  itemsize=jnp_itemsize(spec.dtype))
+            else:
+                tile = RGB_DEFAULT_TILE
+        chunk_from_table = chunk is not None and spec.chunk is None
+        if chunk is None:
+            chunk = 0
+        if (spec.backend == "kernel" and chunk and chunk_from_table
+                and m_lane % chunk):
+            # A bucketed table entry can carry a chunk that does not
+            # divide this shape's lane-rounded m; run dense instead of
+            # letting rgb_pallas reject the launch.  (An *explicit*
+            # invalid chunk still fails loudly there, as before.)
+            chunk = 0
+        if tile == spec.tile and chunk == spec.chunk:
+            return spec
+        return dataclasses.replace(spec, tile=tile, chunk=chunk)
 
     # -- construction of the runtime object ------------------------------
 

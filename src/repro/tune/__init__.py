@@ -1,0 +1,46 @@
+"""repro.tune — measured autotuning for solver launch geometry.
+
+The paper's speedups hinge on launch geometry matched to the hardware;
+this subsystem replaces the static tile/chunk heuristics with a
+*measured* per-device timing table:
+
+* :mod:`~repro.tune.space` enumerates the valid ``(backend, tile,
+  chunk)`` candidates for a shape class;
+* :mod:`~repro.tune.runner` times them over representative packed
+  batches (warmup, ``block_until_ready``, median-of-k);
+* :mod:`~repro.tune.table` persists the winners in a versioned JSON
+  :class:`TuningTable` keyed by ``(device_kind, backend, dtype,
+  m bucket, batch bucket)``, with load/merge/save and a bundled
+  default for CPU + TPU.
+
+Resolution precedence is *explicit > table > heuristic*:
+:meth:`repro.solver.SolverSpec.resolve_for_shape` consults the active
+table only for fields the user left unset, and a table miss silently
+falls back to the static heuristics — tuning can change performance,
+never availability.
+
+Regenerate tables offline with ``python -m benchmarks.tune_cli``; pin a
+table per process with :func:`set_active_table`/:func:`use_table` or
+the ``REPRO_TUNE_TABLE`` environment variable.
+"""
+from repro.tune.runner import (TuneResult, measure, representative_batch,
+                               results_to_entries, time_candidate, tune,
+                               tune_shape)
+from repro.tune.space import (Candidate, candidate_space,
+                              default_backends)
+from repro.tune.table import (SCHEMA_VERSION, TableEntry, TableKey,
+                              TuningTable, active_table, bucket_pow2,
+                              current_device_kind, default_table,
+                              device_platform, lookup,
+                              normalize_device_kind, set_active_table,
+                              use_table)
+
+__all__ = [
+    "Candidate", "SCHEMA_VERSION", "TableEntry", "TableKey",
+    "TuneResult", "TuningTable", "active_table", "bucket_pow2",
+    "candidate_space", "current_device_kind", "default_backends",
+    "default_table", "device_platform", "lookup", "measure",
+    "normalize_device_kind", "representative_batch",
+    "results_to_entries", "set_active_table", "time_candidate", "tune",
+    "tune_shape", "use_table",
+]

@@ -1,0 +1,182 @@
+"""The measured tuning loop: time candidates, record winners.
+
+This is a proper measurement harness, not a wall-clock guess:
+
+* the workload is a *representative packed batch* — the same
+  :class:`~repro.core.packed.PackedLPBatch` layout the serving hot path
+  feeds the solver, generated from the paper's random-feasible
+  distribution at the target shape;
+* every candidate is timed with ``warmup`` untimed calls first (pays
+  the jit compile outside the measurement), then ``iters`` timed calls,
+  each fenced with ``jax.block_until_ready`` so device work is actually
+  included, and the **median** is kept (robust to scheduler noise);
+* candidates are built as fully-explicit :class:`SolverSpec`\\ s (tile
+  and chunk pinned), so timing a candidate never consults the tuning
+  table — no feedback loop between measuring and resolving.
+
+:func:`tune` drives the space over a grid of shapes and folds the
+per-backend winners into a :class:`~repro.tune.table.TuningTable`; the
+offline entry point is ``benchmarks/tune_cli.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.lp import random_feasible_lp
+from repro.core.packed import PackedLPBatch, pack
+from repro.solver import SolverSpec
+from repro.tune.space import Candidate, candidate_space
+from repro.tune.table import (BATCH_BUCKET_BASE, M_BUCKET_BASE, TableEntry,
+                              TableKey, TuningTable, bucket_pow2,
+                              current_device_kind)
+
+DEFAULT_WARMUP = 1
+DEFAULT_ITERS = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """One timed candidate at one shape."""
+
+    candidate: Candidate
+    m_pad: int
+    batch: int
+    dtype: str
+    device_kind: str
+    seconds: float       # median wall-clock per solve
+
+    @property
+    def us_per_lp(self) -> float:
+        return self.seconds / self.batch * 1e6
+
+
+def measure(fn, *args, warmup: int = DEFAULT_WARMUP,
+            iters: int = DEFAULT_ITERS) -> float:
+    """Median wall-clock seconds of ``fn(*args)``, device-fenced."""
+    if iters < 1:
+        raise ValueError(f"iters={iters} < 1")
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def representative_batch(m_pad: int, batch: int, *,
+                         dtype: str = "float32",
+                         seed: int = 0) -> PackedLPBatch:
+    """A packed random-feasible batch at the target shape — the layout
+    and distribution the serving hot path actually runs."""
+    lp = random_feasible_lp(jax.random.key(seed ^ (m_pad * 7919 + batch)),
+                            batch, m_pad)
+    pb = pack(lp)
+    if dtype != "float32":
+        pb = PackedLPBatch(L=pb.L.astype(dtype), c=pb.c.astype(dtype),
+                           m_valid=pb.m_valid)
+    return pb
+
+
+def candidate_spec(cand: Candidate, *, dtype: str = "float32",
+                   interpret: Optional[bool] = None) -> SolverSpec:
+    """The fully-explicit spec for one candidate (tile and chunk pinned,
+    so resolution never re-enters the tuning table)."""
+    return SolverSpec(backend=cand.backend, tile=cand.tile,
+                      chunk=cand.chunk, dtype=dtype, interpret=interpret)
+
+
+def time_candidate(cand: Candidate, pb: PackedLPBatch, *,
+                   dtype: str = "float32",
+                   interpret: Optional[bool] = None,
+                   warmup: int = DEFAULT_WARMUP,
+                   iters: int = DEFAULT_ITERS) -> float:
+    """Median seconds for one candidate over one packed batch."""
+    solver = candidate_spec(cand, dtype=dtype,
+                            interpret=interpret).build()
+    return measure(solver.solve, pb, warmup=warmup, iters=iters)
+
+
+def tune_shape(
+    m_pad: int,
+    batch: int,
+    *,
+    dtype: str = "float32",
+    backends: Optional[Sequence[str]] = None,
+    device_kind: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    warmup: int = DEFAULT_WARMUP,
+    iters: int = DEFAULT_ITERS,
+    seed: int = 0,
+) -> List[TuneResult]:
+    """Time every valid candidate at one shape; sorted fastest-first."""
+    kind = device_kind if device_kind is not None else current_device_kind()
+    pb = representative_batch(m_pad, batch, dtype=dtype, seed=seed)
+    results = []
+    for cand in candidate_space(m_pad, batch, dtype=dtype,
+                                device_kind=kind, backends=backends):
+        seconds = time_candidate(cand, pb, dtype=dtype,
+                                 interpret=interpret, warmup=warmup,
+                                 iters=iters)
+        results.append(TuneResult(candidate=cand, m_pad=m_pad,
+                                  batch=batch, dtype=dtype,
+                                  device_kind=kind, seconds=seconds))
+    results.sort(key=lambda r: r.seconds)
+    return results
+
+
+def results_to_entries(results: Iterable[TuneResult]) -> List[TableEntry]:
+    """Per-backend winners of one shape's results as table entries."""
+    best = {}
+    for r in results:
+        cur = best.get(r.candidate.backend)
+        if cur is None or r.seconds < cur.seconds:
+            best[r.candidate.backend] = r
+    entries = []
+    for r in best.values():
+        key = TableKey(
+            device_kind=r.device_kind, backend=r.candidate.backend,
+            dtype=r.dtype,
+            m_bucket=bucket_pow2(r.m_pad, M_BUCKET_BASE),
+            batch_bucket=bucket_pow2(r.batch, BATCH_BUCKET_BASE))
+        entries.append(TableEntry(key=key, tile=r.candidate.tile,
+                                  chunk=r.candidate.chunk,
+                                  us_per_lp=r.us_per_lp))
+    return entries
+
+
+def tune(
+    shapes: Sequence[Tuple[int, int]],
+    *,
+    dtype: str = "float32",
+    backends: Optional[Sequence[str]] = None,
+    device_kind: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    warmup: int = DEFAULT_WARMUP,
+    iters: int = DEFAULT_ITERS,
+    table: Optional[TuningTable] = None,
+    on_result=None,
+) -> TuningTable:
+    """Tune a grid of ``(m_pad, batch)`` shapes into a table.
+
+    ``table`` (if given) is updated in place via the faster-wins merge;
+    ``on_result`` is an optional callback fired with every
+    :class:`TuneResult` as it lands (the CLI uses it to stream JSON
+    rows)."""
+    if table is None:
+        table = TuningTable()
+    for m_pad, batch in shapes:
+        results = tune_shape(m_pad, batch, dtype=dtype, backends=backends,
+                             device_kind=device_kind, interpret=interpret,
+                             warmup=warmup, iters=iters)
+        if on_result is not None:
+            for r in results:
+                on_result(r)
+        table.merge(TuningTable(results_to_entries(results)))
+    return table

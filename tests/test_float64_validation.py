@@ -1,0 +1,88 @@
+"""float64 path validated against scipy.optimize.linprog.
+
+The solve runs in a subprocess with ``JAX_ENABLE_X64=1`` (x64 must be
+set before jax initialises, so it cannot be toggled inside this test
+process) over adversarial, ragged and infeasible batches on every
+backend; inside, scipy solves the same LPs as
+``max c@x  s.t.  A@x <= b, |x|,|y| <= M``.  Skips cleanly when scipy
+is unavailable or the jax build cannot enable x64.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+_SNIPPET = r"""
+import jax
+assert jax.config.jax_enable_x64, "SKIP:x64-unavailable"
+try:
+    from scipy.optimize import linprog
+except Exception:
+    raise SystemExit("SKIP:no-scipy")
+import numpy as np
+from repro.core import adversarial_lp, infeasible_lp, ragged_feasible_lp
+from repro.solver import SolverSpec, get_solver
+
+M = 1.0e4
+batches = {
+    "adversarial": adversarial_lp(4, 24, dtype=jax.numpy.float64),
+    "ragged": ragged_feasible_lp(jax.random.key(5), 6, 18, m_min=3,
+                                 dtype=jax.numpy.float64),
+    "infeasible": infeasible_lp(3, 8, dtype=jax.numpy.float64),
+}
+specs = {
+    "naive": SolverSpec(backend="naive", dtype="float64"),
+    "rgb": SolverSpec(backend="rgb", dtype="float64"),
+    "rgb-chunked": SolverSpec(backend="rgb", tile=8, chunk=64,
+                              dtype="float64"),
+    "kernel": SolverSpec(backend="kernel", interpret=True,
+                         dtype="float64"),
+}
+for bname, lp in batches.items():
+    A = np.asarray(lp.A); b = np.asarray(lp.b); c = np.asarray(lp.c)
+    mv = np.asarray(lp.m_valid)
+    ref_obj, ref_feas = [], []
+    for i in range(A.shape[0]):
+        m = int(mv[i])
+        res = linprog(-c[i], A_ub=A[i, :m], b_ub=b[i, :m],
+                      bounds=[(-M, M), (-M, M)], method="highs")
+        ref_feas.append(res.status == 0)
+        ref_obj.append(-res.fun if res.status == 0 else np.nan)
+    for sname, spec in specs.items():
+        sol = get_solver(spec).solve(lp)
+        assert sol.x.dtype == jax.numpy.float64, (bname, sname)
+        feas = np.asarray(sol.feasible)
+        obj = np.asarray(sol.objective)
+        assert list(feas) == ref_feas, (
+            f"{bname}/{sname}: feasibility {list(feas)} != scipy "
+            f"{ref_feas}")
+        for i, ok in enumerate(ref_feas):
+            if ok:
+                assert abs(obj[i] - ref_obj[i]) <= 1e-7 * (
+                    1.0 + abs(ref_obj[i])), (
+                    f"{bname}/{sname}[{i}]: objective {obj[i]} != "
+                    f"scipy {ref_obj[i]}")
+print("float64-validation-ok", len(batches) * len(specs))
+"""
+
+
+def test_float64_matches_scipy():
+    env = dict(os.environ)
+    env["JAX_ENABLE_X64"] = "1"
+    env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
+                       capture_output=True, text=True, timeout=600)
+    tail = (r.stdout + r.stderr)
+    if "SKIP:no-scipy" in tail:
+        pytest.skip("scipy unavailable in this environment")
+    if "SKIP:x64-unavailable" in tail:
+        pytest.skip("jax build cannot enable x64")
+    assert r.returncode == 0, (
+        f"float64 validation failed:\nSTDOUT:\n{r.stdout}\n"
+        f"STDERR:\n{r.stderr}")
+    assert "float64-validation-ok" in r.stdout

@@ -73,13 +73,15 @@ def test_exec_spec_validation():
     with pytest.raises(ValueError):
         ExecSpec(bucket_m=128, b_pad=33,
                  solver=SolverSpec(backend="rgb", tile=32))
-    # b_pad padding needs a concrete tile (kernel keeps tile=None as
-    # "pick per shape"; rgb canonicalises tile=None to 32 on resolve)
+    # b_pad padding needs a concrete tile (tile=None means "pick per
+    # shape" on every backend now — the scheduler pins it per bucket
+    # via resolve_for_shape before building an ExecSpec)
     with pytest.raises(ValueError):
         ExecSpec(bucket_m=128, b_pad=32,
                  solver=SolverSpec(backend="kernel"))
-    assert ExecSpec(bucket_m=128, b_pad=32,
-                    solver=SolverSpec(backend="rgb")).tile == 32
+    with pytest.raises(ValueError):
+        ExecSpec(bucket_m=128, b_pad=32,
+                 solver=SolverSpec(backend="rgb"))
     with pytest.raises(TypeError):
         ExecSpec(bucket_m=128, b_pad=32, solver="rgb")
 
@@ -110,8 +112,11 @@ def test_scheduler_accepts_spec_and_rejects_mixed_kwargs():
         BatchScheduler(spec, method="rgb")
     with pytest.raises(TypeError):
         BatchScheduler("rgb")
-    # tile=None gets the serving default so the b_pad ladder is defined
-    assert BatchScheduler(SolverSpec(backend="rgb")).spec.tile == 32
+    # tile=None stays unset on the spec (pinned per bucket at flush
+    # time); the legacy .tile view reports the serving default
+    sched_default = BatchScheduler(SolverSpec(backend="rgb"))
+    assert sched_default.spec.tile is None
+    assert sched_default.tile == 32
     # shuffle specs are rejected: the flush-wide shuffle would make a
     # request's result depend on its position in the super-batch
     with pytest.raises(ValueError, match="shuffle"):
@@ -212,6 +217,65 @@ def test_flush_does_zero_repacks(method, interpret):
         f.result(timeout=120.0)
     assert pack_call_count() == n0, (
         "serve_lp flush path performed an AoS->SoA repack")
+
+
+def test_flush_buffers_reused_for_stable_bucket():
+    """Steady traffic on a stable bucket must not reallocate the host
+    flush buffers: the per-bucket pool allocates once and every later
+    flush of that shape leases the same buffers back."""
+    sched = BatchScheduler(method="rgb", max_batch=1000, tile=8)
+    reqs = _mixed_requests(ms=(9, 10, 11, 12), reps=1)  # one bucket (16)
+    results = []
+    for round_ in range(4):
+        futs = [sched.submit(*r) for r in reqs]
+        sched.flush()
+        results.append([f.result(timeout=60.0) for f in futs])
+    assert sched.buffers.lease_count == 4
+    assert sched.buffers.alloc_count == 1, (
+        "stable bucket reallocated its flush buffers "
+        f"({sched.buffers.alloc_count} allocations in 4 flushes)")
+    # buffer reuse must not leak state between flushes
+    for later in results[1:]:
+        for a, b in zip(results[0], later):
+            np.testing.assert_array_equal(a.x, b.x)
+            assert a.feasible == b.feasible
+    # a new bucket shape allocates its own set, once
+    big = _mixed_requests(ms=(200, 210), reps=1)
+    for round_ in range(2):
+        futs = [sched.submit(*r) for r in big]
+        sched.flush()
+        for f in futs:
+            f.result(timeout=60.0)
+    assert sched.buffers.alloc_count == 2
+
+
+def test_scheduler_pins_tuned_config_per_bucket():
+    """A tuning-table entry matching a bucket's shape class changes the
+    launch geometry of that bucket's executable; a miss keeps the
+    serving default — and explicit spec values beat the table."""
+    from repro.tune import (TableEntry, TableKey, TuningTable,
+                            current_device_kind, use_table)
+    entry = TableEntry(TableKey(current_device_kind(), "rgb", "float32",
+                                m_bucket=16, batch_bucket=8), tile=8,
+                       chunk=0, us_per_lp=1.0)
+    req_small = _mixed_requests(ms=(9,), reps=1)[0]    # bucket_m 16
+    req_large = _mixed_requests(ms=(70,), reps=1)[0]   # bucket_m 128
+    with use_table(TuningTable([entry])):
+        sched = BatchScheduler(SolverSpec(backend="rgb"), max_batch=1000)
+        f1 = sched.submit(*req_small)
+        f2 = sched.submit(*req_large)
+        sched.flush()
+        f1.result(timeout=60.0), f2.result(timeout=60.0)
+        tiles = {k.bucket_m: k.solver.tile for k in sched.cache._cache}
+        assert tiles[16] == 8, "tuned tile did not reach the ExecSpec"
+        assert tiles[128] == 32, "table miss should keep the default"
+        # explicit spec tile wins over the same table entry
+        sched_exp = BatchScheduler(SolverSpec(backend="rgb", tile=16),
+                                   max_batch=1000)
+        f3 = sched_exp.submit(*req_small)
+        sched_exp.flush()
+        f3.result(timeout=60.0)
+        assert all(k.solver.tile == 16 for k in sched_exp.cache._cache)
 
 
 def test_submit_honors_spec_dtype():

@@ -62,16 +62,35 @@ def test_spec_resolution():
         is False
     # resolving an already-resolved spec is the identity
     assert r.resolve() is r
-    # inert fields canonicalise: seed is pinned when shuffle=False and
-    # rgb's tile default becomes concrete, so identical execution plans
-    # share one cache entry
+    # inert fields canonicalise: seed is pinned when shuffle=False, so
+    # identical execution plans share one cache entry
     assert SolverSpec(backend="rgb", seed=5).resolve() == \
         SolverSpec(backend="rgb").resolve()
-    assert SolverSpec(backend="rgb").resolve().tile == 32
     assert SolverSpec(backend="rgb", seed=5, shuffle=True).resolve() != \
         SolverSpec(backend="rgb", shuffle=True).resolve()
-    # kernel keeps tile=None ("VMEM-budgeted per shape")
+    # unset launch geometry survives resolve() — it means "pick per
+    # shape" and is pinned by resolve_for_shape (table, then heuristic)
+    assert SolverSpec(backend="rgb").resolve().tile is None
+    assert SolverSpec(backend="rgb").resolve().chunk is None
     assert SolverSpec(backend="kernel").resolve("cpu").tile is None
+
+
+def test_spec_resolve_for_shape_heuristics():
+    """With no tuning-table entry, resolve_for_shape pins exactly the
+    pre-tuning heuristics; explicit values pass through untouched."""
+    from repro.tune import TuningTable, use_table
+    with use_table(TuningTable()):   # force table misses
+        r = SolverSpec(backend="rgb").resolve_for_shape(21, 9)
+        assert r.is_shape_resolved
+        assert (r.tile, r.chunk) == (32, 0)
+        k = SolverSpec(backend="kernel").resolve_for_shape(200, 64,
+                                                           "cpu")
+        assert k.tile is not None and k.chunk == 0
+        e = SolverSpec(backend="rgb", tile=8,
+                       chunk=64).resolve_for_shape(21, 9)
+        assert (e.tile, e.chunk) == (8, 64)
+        # resolving a shape-resolved spec is the identity
+        assert r.resolve_for_shape(21, 9) is r
 
 
 def test_float64_requires_x64():

@@ -1,0 +1,338 @@
+"""The repro.tune autotuning subsystem: table semantics (keys, buckets,
+persistence, merge), candidate-space validity, the measured runner, and
+— the load-bearing contract — SolverSpec resolution precedence
+*explicit > table > heuristic* with graceful miss fallback."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import pack, random_feasible_lp
+from repro.kernels.batch_lp import LANE
+from repro.solver import SolverSpec, solve_with_spec
+from repro.tune import (Candidate, TableEntry, TableKey, TuningTable,
+                        bucket_pow2, candidate_space, current_device_kind,
+                        default_table, device_platform, measure,
+                        normalize_device_kind, representative_batch,
+                        results_to_entries, set_active_table, tune,
+                        tune_shape, use_table)
+from repro.tune.table import SCHEMA_VERSION
+
+
+def _key(device="cpu", backend="rgb", dtype="float32", m_bucket=32,
+         batch_bucket=16):
+    return TableKey(device, backend, dtype, m_bucket, batch_bucket)
+
+
+def _entry(tile=16, chunk=64, us=1.0, **kw):
+    return TableEntry(_key(**kw), tile=tile, chunk=chunk, us_per_lp=us)
+
+
+# -- table semantics ------------------------------------------------------
+
+def test_bucket_pow2_ladder():
+    assert bucket_pow2(1, 8) == 8
+    assert bucket_pow2(8, 8) == 8
+    assert bucket_pow2(9, 8) == 16
+    assert bucket_pow2(700, 8) == 1024
+    with pytest.raises(ValueError):
+        bucket_pow2(0, 8)
+
+
+def test_device_kind_normalisation():
+    assert normalize_device_kind("TPU v4") == "tpu-v4"
+    assert normalize_device_kind("  NVIDIA  A100 ") == "nvidia-a100"
+    assert device_platform("TPU v5 lite") == "tpu"
+    assert device_platform("cpu") == "cpu"
+    # keys normalise on construction
+    assert _key(device="TPU v4").device_kind == "tpu-v4"
+
+
+def test_table_put_get_lookup_buckets():
+    t = TuningTable([_entry()])
+    assert t.get(_key()) is not None
+    # lookup buckets raw shapes onto the ladder: m=21 -> 32, batch=9 -> 16
+    hit = t.lookup(backend="rgb", dtype="float32", m=21, batch=9,
+                   device_kind="cpu")
+    assert hit is not None and (hit.tile, hit.chunk) == (16, 64)
+    # misses: other bucket, backend, dtype, device
+    assert t.lookup(backend="rgb", dtype="float32", m=500, batch=9,
+                    device_kind="cpu") is None
+    assert t.lookup(backend="naive", dtype="float32", m=21, batch=9,
+                    device_kind="cpu") is None
+    assert t.lookup(backend="rgb", dtype="float64", m=21, batch=9,
+                    device_kind="cpu") is None
+    assert t.lookup(backend="rgb", dtype="float32", m=21, batch=9,
+                    device_kind="tpu-v4") is None
+
+
+def test_table_lookup_fallbacks():
+    # platform-family fallback: one "tpu" row covers every tpu model
+    fam = TuningTable([_entry(device="tpu", tile=64, chunk=0)])
+    hit = fam.lookup(backend="rgb", dtype="float32", m=21, batch=9,
+                     device_kind="TPU v4")
+    assert hit is not None and hit.tile == 64
+    # exact device beats the family row
+    both = TuningTable([_entry(device="tpu", tile=64, chunk=0),
+                        _entry(device="tpu-v4", tile=8, chunk=0)])
+    assert both.lookup(backend="rgb", dtype="float32", m=21, batch=9,
+                       device_kind="tpu v4").tile == 8
+    # batch-wildcard rung (batch_bucket=0) catches unknown batch sizes
+    wild = TuningTable([_entry(batch_bucket=0, tile=128, chunk=0)])
+    assert wild.lookup(backend="rgb", dtype="float32", m=21,
+                       device_kind="cpu").tile == 128
+    assert wild.lookup(backend="rgb", dtype="float32", m=21, batch=4096,
+                       device_kind="cpu").tile == 128
+
+
+def test_table_merge_keeps_faster():
+    slow = TuningTable([_entry(tile=8, us=9.0)])
+    fast = TuningTable([_entry(tile=16, us=2.0)])
+    assert slow.merge(fast).get(_key()).tile == 16
+    # merging the slower one back does not regress
+    assert fast.merge(TuningTable([_entry(tile=8, us=9.0)])) \
+        .get(_key()).tile == 16
+    # disjoint keys union
+    other = TuningTable([_entry(m_bucket=64, tile=32, us=1.0)])
+    assert len(fast.merge(other)) == 2
+
+
+def test_table_json_roundtrip(tmp_path):
+    t = TuningTable([_entry(), _entry(backend="kernel", tile=64, chunk=128,
+                                      us=0.5),
+                     _entry(device="tpu", dtype="float64", us=3.0)])
+    p = t.save(tmp_path / "t.json")
+    assert TuningTable.load(p) == t
+    doc = json.loads(p.read_text())
+    assert doc["version"] == SCHEMA_VERSION
+    # version mismatch is rejected loudly (the CI cache-bust contract)
+    doc["version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema version"):
+        TuningTable.from_json(doc)
+
+
+def test_entry_validation():
+    with pytest.raises(ValueError):
+        TableEntry(_key(), tile=0, chunk=0, us_per_lp=1.0)
+    with pytest.raises(ValueError):
+        TableEntry(_key(), tile=8, chunk=-1, us_per_lp=1.0)
+    with pytest.raises(ValueError):
+        TableEntry(_key(), tile=8, chunk=0, us_per_lp=float("nan"))
+
+
+def test_default_table_loads():
+    """The bundled table must parse (entries may be empty on exotic
+    platforms but the file itself is part of the package contract)."""
+    t = default_table()
+    assert isinstance(t, TuningTable)
+    for e in t.entries():
+        assert e.key.backend in ("naive", "rgb", "kernel")
+        assert e.tile >= 1 and e.chunk >= 0
+
+
+# -- candidate space ------------------------------------------------------
+
+def test_candidate_space_validity():
+    cands = candidate_space(128, 256, device_kind="cpu",
+                            backends=("naive", "rgb", "kernel"))
+    assert Candidate("naive", 32, 0) in cands
+    kinds = {c.backend for c in cands}
+    assert kinds == {"naive", "rgb", "kernel"}
+    for c in cands:
+        assert c.tile >= 1 and c.chunk >= 0
+        if c.backend == "rgb" and c.chunk:
+            assert c.chunk < 128          # chunk >= m_pad is degenerate
+        if c.backend == "kernel":
+            assert c.tile % 8 == 0        # sublane multiples
+            if c.chunk:
+                m_lane = -(-128 // LANE) * LANE
+                assert m_lane % c.chunk == 0
+    # deterministic enumeration (the tuner's grid must be reproducible)
+    assert cands == candidate_space(128, 256, device_kind="cpu",
+                                    backends=("naive", "rgb", "kernel"))
+    # tiny batches keep at least one rung per backend
+    tiny = candidate_space(8, 2, device_kind="cpu", backends=("rgb",))
+    assert {c.tile for c in tiny} == {8}
+    with pytest.raises(ValueError):
+        candidate_space(128, 256, dtype="int8")
+    with pytest.raises(ValueError):
+        candidate_space(0, 4)
+
+
+def test_default_backends_by_platform():
+    from repro.tune import default_backends
+    assert default_backends("cpu") == ("naive", "rgb")
+    assert default_backends("tpu-v4") == ("rgb", "kernel")
+
+
+# -- runner ---------------------------------------------------------------
+
+def test_measure_is_fenced_and_positive():
+    pb = representative_batch(16, 8)
+    solver = SolverSpec(backend="rgb", tile=8, chunk=0).build()
+    s = measure(solver.solve, pb, warmup=1, iters=3)
+    assert s > 0.0
+    with pytest.raises(ValueError):
+        measure(solver.solve, pb, iters=0)
+
+
+def test_tune_shape_records_real_timings():
+    results = tune_shape(16, 8, backends=("rgb",), warmup=1, iters=1)
+    assert results and all(r.seconds > 0 for r in results)
+    assert results == sorted(results, key=lambda r: r.seconds)
+    entries = results_to_entries(results)
+    assert len(entries) == 1  # one winner per backend
+    e = entries[0]
+    assert e.key.backend == "rgb"
+    assert e.key.m_bucket == 16 and e.key.batch_bucket == 8
+    assert e.key.device_kind == current_device_kind()
+    # the winner is the fastest candidate's geometry
+    assert (e.tile, e.chunk) == (results[0].candidate.tile,
+                                 results[0].candidate.chunk)
+
+
+def test_tune_merges_into_table():
+    seen = []
+    table = tune([(16, 8)], backends=("rgb",), warmup=1, iters=1,
+                 on_result=seen.append)
+    assert len(table) == 1 and seen
+    hit = table.lookup(backend="rgb", dtype="float32", m=16, batch=8)
+    assert hit is not None
+
+
+# -- resolution precedence (the acceptance contract) ----------------------
+
+def _synthetic_table(tile=16, chunk=64):
+    return TuningTable([TableEntry(
+        TableKey(current_device_kind(), "rgb", "float32", m_bucket=32,
+                 batch_bucket=16), tile=tile, chunk=chunk,
+        us_per_lp=1.0)])
+
+
+def test_table_entry_changes_resolved_geometry():
+    """A synthetic TuningTable entry measurably changes the resolved
+    (tile, chunk) for a matching SolverSpec — no real timing needed."""
+    spec = SolverSpec(backend="rgb")
+    with use_table(TuningTable()):
+        base = spec.resolve_for_shape(21, 9)
+    assert (base.tile, base.chunk) == (32, 0)      # heuristic floor
+    with use_table(_synthetic_table(tile=16, chunk=64)):
+        tuned = spec.resolve_for_shape(21, 9)
+    assert (tuned.tile, tuned.chunk) == (16, 64)
+    assert (tuned.tile, tuned.chunk) != (base.tile, base.chunk)
+
+
+def test_explicit_values_beat_table():
+    with use_table(_synthetic_table(tile=16, chunk=64)):
+        full = SolverSpec(backend="rgb", tile=8,
+                          chunk=0).resolve_for_shape(21, 9)
+        assert (full.tile, full.chunk) == (8, 0)
+        # partial: explicit tile, tuned chunk (and vice versa)
+        half = SolverSpec(backend="rgb", tile=8).resolve_for_shape(21, 9)
+        assert (half.tile, half.chunk) == (8, 64)
+        other = SolverSpec(backend="rgb", chunk=0).resolve_for_shape(21, 9)
+        assert (other.tile, other.chunk) == (16, 0)
+
+
+def test_table_miss_falls_back_never_errors():
+    with use_table(_synthetic_table()):
+        # different m bucket, batch bucket, dtype: all miss -> heuristics
+        assert SolverSpec(backend="rgb").resolve_for_shape(
+            500, 9).tile == 32
+        assert SolverSpec(backend="rgb").resolve_for_shape(
+            21, 4096).tile == 32
+        n = SolverSpec(backend="naive").resolve_for_shape(21, 9)
+        assert n.is_shape_resolved
+    # a pathological active table must never take resolution down
+    class _Boom:
+        def lookup(self, **kw):
+            raise RuntimeError("boom")
+
+        def lookup_best_backend(self, **kw):
+            raise RuntimeError("boom")
+    set_active_table(_Boom())
+    try:
+        r = SolverSpec(backend="rgb").resolve_for_shape(21, 9)
+        assert (r.tile, r.chunk) == (32, 0)
+    finally:
+        set_active_table(None)
+
+
+def test_kernel_chunk_from_table_must_divide_lane_rounded_m():
+    """A bucketed kernel entry can carry a chunk that does not divide a
+    specific shape's lane-rounded m; resolution drops it to dense
+    instead of producing an invalid launch."""
+    t = TuningTable([TableEntry(
+        TableKey(current_device_kind(), "kernel", "float32",
+                 m_bucket=bucket_pow2(384, 8), batch_bucket=16),
+        tile=32, chunk=256, us_per_lp=1.0)])
+    with use_table(t):
+        # m=384 lane-rounds to 384, and 384 % 256 != 0 -> chunk drops
+        spec = SolverSpec(backend="kernel").resolve_for_shape(384, 16,
+                                                              "cpu")
+        assert spec.chunk == 0 and spec.tile == 32
+        # m=256 lane-rounds to 256: the tuned chunk is valid, kept
+        t2 = TuningTable([TableEntry(
+            TableKey(current_device_kind(), "kernel", "float32",
+                     m_bucket=bucket_pow2(256, 8), batch_bucket=16),
+            tile=32, chunk=128, us_per_lp=1.0)])
+        with use_table(t2):
+            spec = SolverSpec(backend="kernel").resolve_for_shape(
+                256, 16, "cpu")
+            assert spec.chunk == 128
+
+
+def test_auto_backend_picks_measured_winner():
+    kind = current_device_kind()
+    mk = lambda backend, us: TableEntry(
+        TableKey(kind, backend, "float32", m_bucket=32, batch_bucket=16),
+        tile=32, chunk=0, us_per_lp=us)
+    t = TuningTable([mk("naive", 0.5), mk("rgb", 2.0)])
+    with use_table(t):
+        spec = SolverSpec(backend="auto").resolve_for_shape(21, 9)
+        assert spec.backend == "naive"
+    # no measurements: platform default stands
+    with use_table(TuningTable()):
+        spec = SolverSpec(backend="auto").resolve_for_shape(21, 9)
+        assert spec.backend == ("kernel" if jax.default_backend() == "tpu"
+                                else "rgb")
+
+
+def test_auto_backend_reaches_built_solver():
+    """The shape-dependent auto choice must survive ``spec.build()``:
+    the Solver keeps "auto" on its solving spec (resolution happens at
+    trace time, per shape), while its introspection spec shows the
+    platform default used on a table miss."""
+    solver = SolverSpec(backend="auto").build()
+    assert solver._solve_spec.backend == "auto"
+    assert solver.spec.backend != "auto"
+    kind = current_device_kind()
+    t = TuningTable([TableEntry(
+        TableKey(kind, "naive", "float32", m_bucket=32, batch_bucket=16),
+        tile=32, chunk=0, us_per_lp=0.5)])
+    lp = random_feasible_lp(jax.random.key(7), 9, 21)
+    with use_table(t):
+        tuned = solver.solve(lp)            # runs naive per the table
+        ref = SolverSpec(backend="naive").build().solve(lp)
+    np.testing.assert_array_equal(np.asarray(tuned.x), np.asarray(ref.x))
+
+
+def test_tuned_solve_end_to_end_matches_untuned():
+    """The tuned geometry changes the launch, not the answer: solving
+    with a synthetic table active agrees with the untuned solve."""
+    lp = random_feasible_lp(jax.random.key(3), 9, 21)
+    spec = SolverSpec(backend="rgb")
+    with use_table(TuningTable()):
+        base = solve_with_spec(spec, lp)
+    with use_table(_synthetic_table(tile=8, chunk=64)):
+        tuned = solve_with_spec(spec, lp)
+        tuned_packed = solve_with_spec(spec, pack(lp))
+    np.testing.assert_array_equal(np.asarray(base.feasible),
+                                  np.asarray(tuned.feasible))
+    np.testing.assert_allclose(np.asarray(base.objective),
+                               np.asarray(tuned.objective),
+                               rtol=5e-4, atol=5e-4)
+    # packed/AoS bit-identity holds under tuned geometry too
+    np.testing.assert_array_equal(np.asarray(tuned.x),
+                                  np.asarray(tuned_packed.x))
