@@ -12,6 +12,16 @@ from repro.serve_lp.bench import BenchConfig, run_traffic, smoke_config
 
 def run(full: bool = False) -> None:
     profiles = {"serve_smoke": smoke_config()}
+    # Saturating burst through the pipelined loop vs the stop-and-go
+    # loop: the A/B that shows what overlapping assembly with in-flight
+    # solves buys (inflight/overlap/idle come from the new gauges).
+    burst = smoke_config()
+    burst.open_loop = True
+    profiles["serve_burst_pipelined"] = burst
+    stopgo = smoke_config()
+    stopgo.open_loop = True
+    stopgo.pipeline = False
+    profiles["serve_burst_stopgo"] = stopgo
     if full:
         profiles["serve_open_loop"] = BenchConfig(
             requests=2000, rate=5000.0, m_max=1024, max_batch=128,
@@ -26,4 +36,7 @@ def run(full: bool = False) -> None:
              f"|p50ms={snap['latency_p50_ms']:.2f}"
              f"|p99ms={snap['latency_p99_ms']:.2f}"
              f"|waste_cells={snap['padding_waste_cells']:.3f}"
-             f"|cache_hit={snap['cache']['hit_rate']:.3f}")
+             f"|cache_hit={snap['cache']['hit_rate']:.3f}"
+             f"|inflight_max={snap['inflight_max']}"
+             f"|overlapped={snap['overlapped_dispatches']}"
+             f"|idle_s={snap['device_idle_s_est']:.3f}")

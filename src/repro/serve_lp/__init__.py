@@ -6,10 +6,18 @@ scheduler aggregates them into shape-bucketed super-batches, solves each
 flush through a cached executable (sharded across devices when more than
 one is visible) and scatters results to the futures in submission order.
 
-    scheduler (submit/flush policy)
+    scheduler (submit/flush policy, pipelined dispatch + completion)
         -> buckets (shape ladder + executable cache)
-        -> sharding (pmap across jax.devices(), single-device fallback)
+        -> sharding (dispatch/complete Executables; pmap across
+           jax.devices(), single-device jit fallback)
         -> futures (per-request LPResult)
+
+The serve loop is pipelined by default: flush dispatch is asynchronous
+(device handles, no host sync) and a completion worker scatters
+results, so the host assembles the next super-batch while the device
+solves the current one; ``BatchScheduler(..., pipeline=False)``
+restores the stop-and-go loop and ``max_inflight`` bounds the
+dispatch depth (backpressure).
 
 Use :class:`BatchScheduler` when requests arrive one at a time (serving,
 simulation agents, RPC handlers); build a
@@ -22,11 +30,12 @@ from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
                                     bucket_m, shape_ladder)
 from repro.serve_lp.metrics import ServeMetrics
 from repro.serve_lp.scheduler import BatchScheduler, LPResult
-from repro.serve_lp.sharding import build_executable
+from repro.serve_lp.sharding import (Executable, as_executable,
+                                     build_executable)
 from repro.solver import SolverSpec
 
 __all__ = [
-    "BatchScheduler", "ExecSpec", "ExecutableCache", "LPResult",
-    "ServeMetrics", "SolverSpec", "bucket_batch", "bucket_m",
-    "build_executable", "shape_ladder",
+    "BatchScheduler", "Executable", "ExecSpec", "ExecutableCache",
+    "LPResult", "ServeMetrics", "SolverSpec", "as_executable",
+    "bucket_batch", "bucket_m", "build_executable", "shape_ladder",
 ]

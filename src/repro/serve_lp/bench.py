@@ -5,9 +5,18 @@ pipeline-style): constraint counts are mixed across a log2 ladder and
 each request is feasible, infeasible or degenerate (all constraints
 tight at one point) per a fixed mix.  Requests are submitted open-loop
 at a target rate; the report covers throughput, p50/p99 latency,
-padding waste and executable-cache hit rate.
+padding waste, executable-cache hit rate and the pipeline gauges
+(in-flight depth, overlapped dispatches, device-idle estimate).
+
+``--open-loop`` removes the rate throttle entirely (saturating burst):
+submission always outruns the device, so with pipelining enabled the
+scheduler demonstrably keeps >= 2 flushes in flight while the host
+assembles the next one — ``--assert-overlap`` turns that claim into a
+hard check (used by CI).  ``--no-pipeline`` runs the same traffic
+through the stop-and-go loop for an A/B of the overlap win.
 
     python -m repro.serve_lp.bench --smoke
+    python -m repro.serve_lp.bench --smoke --open-loop --assert-overlap
     python -m repro.serve_lp.bench --requests 2000 --rate 5000 \
         --method kernel --max-batch 128
 """
@@ -42,6 +51,10 @@ class BenchConfig:
     check: int = 8                # requests re-solved directly, 0 = off
     warmup: bool = True           # pre-compile executables, reset counters
     interpret: Optional[bool] = None
+    pipeline: bool = True         # overlap assembly with in-flight solves
+    max_inflight: int = 2         # dispatch backpressure bound
+    open_loop: bool = False       # saturating burst: ignore `rate`
+    assert_overlap: bool = False  # require >=2 flushes seen in flight
 
 
 def smoke_config() -> BenchConfig:
@@ -140,7 +153,9 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
     spec = SolverSpec(backend=cfg.method, tile=cfg.tile, chunk=cfg.chunk,
                       interpret=cfg.interpret)
     sched = BatchScheduler(spec, max_batch=cfg.max_batch,
-                           max_wait_s=cfg.max_wait_s)
+                           max_wait_s=cfg.max_wait_s,
+                           pipeline=cfg.pipeline,
+                           max_inflight=cfg.max_inflight)
     if cfg.warmup:
         _warmup(cfg, sched, quiet)
     futures: List = []
@@ -148,13 +163,15 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
     with sched:
         t0 = time.perf_counter()
         for i in range(cfg.requests):
-            target = t0 + i / cfg.rate
-            now = time.perf_counter()
-            if target > now:
-                time.sleep(target - now)
+            if not cfg.open_loop:
+                target = t0 + i / cfg.rate
+                now = time.perf_counter()
+                if target > now:
+                    time.sleep(target - now)
             A, b, c, _ = make_request(cfg, i)
             futures.append(sched.submit(A, b, c))
-    # context exit stops the timer thread and flushes the tail
+    # context exit stops the timer thread, flushes the tail and joins
+    # every in-flight flush
     results = [f.result(timeout=60.0) for f in futures]
     wall = time.perf_counter() - t_wall0
 
@@ -165,11 +182,25 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
     snap["n_feasible"] = sum(r.feasible for r in results)
     if not quiet:
         print(f"[serve_lp.bench] {cfg.requests} requests "
-              f"({snap['n_feasible']} feasible) wall={wall:.2f}s")
+              f"({snap['n_feasible']} feasible) wall={wall:.2f}s "
+              f"pipeline={'on' if cfg.pipeline else 'off'}")
         print(sched.metrics.format_report(sched.cache.stats()))
         if cfg.check:
             print(f"[serve_lp.bench] check ok: {cfg.check} requests "
                   "match direct solve_batch_lp")
+    if cfg.assert_overlap:
+        assert cfg.pipeline, "--assert-overlap needs pipelining enabled"
+        assert snap["inflight_max"] >= 2, (
+            "pipelined serve loop never had 2 flushes in flight "
+            f"(inflight_max={snap['inflight_max']}); assembly did not "
+            "overlap an in-flight solve")
+        assert snap["overlapped_dispatches"] >= 1, (
+            "no dispatch ever overlapped an in-flight solve")
+        if not quiet:
+            print(f"[serve_lp.bench] overlap ok: max in-flight depth "
+                  f"{snap['inflight_max']}, "
+                  f"{snap['overlapped_dispatches']} overlapped "
+                  "dispatches")
     return snap, sched
 
 
@@ -209,6 +240,14 @@ def main(argv=None) -> None:
     ap.add_argument("--check", type=int, default=8)
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip executable pre-compilation")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="stop-and-go serve loop (A/B the overlap win)")
+    ap.add_argument("--max-inflight", type=int, default=2,
+                    help="dispatch backpressure bound (pipelined mode)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="saturating burst: submit with no rate throttle")
+    ap.add_argument("--assert-overlap", action="store_true",
+                    help="fail unless >=2 flushes were in flight at once")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -222,6 +261,10 @@ def main(argv=None) -> None:
             max_wait_s=args.max_wait_ms / 1e3, tile=args.tile,
             chunk=args.chunk, seed=args.seed, check=args.check)
     cfg.warmup = not args.no_warmup
+    cfg.pipeline = not args.no_pipeline
+    cfg.max_inflight = args.max_inflight
+    cfg.open_loop = args.open_loop
+    cfg.assert_overlap = args.assert_overlap
     run_traffic(cfg)
 
 

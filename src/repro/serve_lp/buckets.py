@@ -15,8 +15,14 @@ executables:
   doubling again bounds the rung count).
 
 The :class:`ExecutableCache` maps an :class:`ExecSpec` (the full shape +
-method key) to a built solver callable and counts hits/misses so the
-serving metrics can prove the bucketing works.
+method key) to a built solver executable and counts hits/misses so the
+serving metrics can prove the bucketing works.  Since the serve loop
+went pipelined, built entries are two-stage
+:class:`~repro.serve_lp.sharding.Executable` objects (async ``dispatch``
+returning device handles + blocking ``complete`` materializing host
+numpy); plain synchronous callables are still accepted — the scheduler
+adapts them via :func:`~repro.serve_lp.sharding.as_executable` — so
+injected test builders keep working.
 """
 from __future__ import annotations
 
@@ -111,9 +117,14 @@ class ExecutableCache:
     """spec -> built executable, with hit/miss accounting.
 
     ``builder`` is called under the cache lock on a miss; the returned
-    callable is stored and reused for every later flush with the same
-    spec.  (The first *invocation* still pays the XLA compile — the cache
-    bounds how often that happens, it does not hide it.)
+    executable (a dispatch/complete
+    :class:`~repro.serve_lp.sharding.Executable` or any callable) is
+    stored and reused for every later flush with the same spec.  (The
+    first *invocation* still pays the XLA compile — the cache bounds
+    how often that happens, it does not hide it.)  One cached
+    executable may serve several concurrently in-flight flushes of the
+    same spec: dispatch/complete hold no per-flush state, so that is
+    safe by construction.
     """
 
     def __init__(self, builder: Callable[[ExecSpec], Callable]):

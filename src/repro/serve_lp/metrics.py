@@ -1,28 +1,60 @@
-"""Serving metrics: latency percentiles, throughput, padding waste.
+"""Serving metrics: latency percentiles, throughput, padding waste, and
+pipeline observability (in-flight depth, dispatch/complete stage times,
+device-idle-gap estimate, error counters).
 
-Everything is recorded under one lock (submit, flush and timer threads
-all write here) and summarised by :meth:`ServeMetrics.snapshot`.  Padding
-waste is tracked two ways because they answer different questions:
+Everything is recorded under one lock (submit, flush, timer and
+completion threads all write here) and summarised by
+:meth:`ServeMetrics.snapshot`.  Padding waste is tracked two ways
+because they answer different questions:
 
 * *problem* waste — neutral problems added to pad the batch dimension;
   these cost kernel time directly;
 * *cell* waste — padded constraint rows (bucket_m - m per request) plus
   all cells of padding problems; this is the VMEM/bandwidth overhead of
   shape bucketing.
+
+The pipelined serve loop adds a second family of questions — *is the
+device actually kept busy?* — answered by:
+
+* the **in-flight gauge** (``record_dispatch``/``record_complete``):
+  current and maximum concurrently dispatched flushes, plus how many
+  dispatches overlapped an already-in-flight solve;
+* the **device-idle estimate**: summed gaps between one flush's
+  completion and the next dispatch while nothing was in flight — the
+  stop-and-go time the pipeline exists to remove;
+* per-flush **assemble vs solve seconds** (host packing time vs
+  dispatch-to-complete device service time).
+
+Latencies are kept in a true bounded *reservoir*: once full, each new
+sample replaces a reservoir slot with probability k/n via a
+deterministic counter-seeded LCG (no ``random`` on the hot path), so
+long runs stay uniformly represented instead of biased toward the
+start; ``latency_seen`` vs ``latency_samples`` in the snapshot shows
+how much sampling occurred.
 """
 from __future__ import annotations
 
 import threading
 import time
+import warnings
 from typing import Dict, List, Optional
 
-_MAX_LATENCIES = 200_000  # reservoir cap; plenty for bench runs
+_MAX_LATENCIES = 200_000  # reservoir size; plenty for bench runs
+
+# Knuth MMIX LCG constants — the deterministic index stream for
+# reservoir replacement (cheap, lock-held, no `random` import).
+_LCG_MUL = 6364136223846793005
+_LCG_INC = 1442695040888963407
+_LCG_MASK = (1 << 64) - 1
 
 
 class ServeMetrics:
-    def __init__(self):
+    def __init__(self, max_latency_samples: int = _MAX_LATENCIES):
         self._lock = threading.Lock()
         self._latencies: List[float] = []
+        self._max_latencies = int(max_latency_samples)
+        self.lat_seen = 0            # latencies offered (>= kept)
+        self._lat_rng = 0x9E3779B97F4A7C15
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
         self.n_solved = 0
@@ -33,6 +65,18 @@ class ServeMetrics:
         self.cells_valid = 0
         self.cells_total = 0
         self.solve_seconds = 0.0
+        self.assemble_seconds = 0.0
+        # Pipeline gauges/counters.
+        self.n_dispatched = 0
+        self.inflight_now = 0
+        self.inflight_max = 0
+        self.overlapped_dispatches = 0
+        self.device_idle_s = 0.0
+        self._t_last_complete: Optional[float] = None
+        # Error counters by kind (timer_flush, solve, ...); each kind
+        # warns once so failures are loud without spamming.
+        self.errors: Dict[str, int] = {}
+        self._warned: set = set()
 
     def touch_clock(self) -> None:
         """Mark traffic activity (throughput is solved / active window)."""
@@ -43,13 +87,72 @@ class ServeMetrics:
             self._t_last = now
 
     def record_latency(self, seconds: float) -> None:
+        """Add one sample to the bounded reservoir.
+
+        Below capacity every sample is kept; past it, sample n replaces
+        a uniformly chosen slot with probability k/n (classic reservoir
+        sampling, index drawn from a deterministic LCG), so percentiles
+        of long runs reflect the whole run, not its first k samples.
+        """
         with self._lock:
-            if len(self._latencies) < _MAX_LATENCIES:
+            self.lat_seen += 1
+            if len(self._latencies) < self._max_latencies:
                 self._latencies.append(seconds)
+                return
+            self._lat_rng = (self._lat_rng * _LCG_MUL + _LCG_INC) \
+                & _LCG_MASK
+            j = self._lat_rng % self.lat_seen
+            if j < self._max_latencies:
+                self._latencies[j] = seconds
+
+    def record_dispatch(self) -> int:
+        """One flush handed to the device; returns the in-flight depth
+        including it.  Dispatches that find the device already busy
+        count as *overlapped*; dispatches that find it idle accrue the
+        idle gap since the previous completion."""
+        now = time.perf_counter()
+        with self._lock:
+            self.n_dispatched += 1
+            self.inflight_now += 1
+            if self.inflight_now > self.inflight_max:
+                self.inflight_max = self.inflight_now
+            if self.inflight_now > 1:
+                self.overlapped_dispatches += 1
+            elif self._t_last_complete is not None:
+                self.device_idle_s += max(0.0,
+                                          now - self._t_last_complete)
+            return self.inflight_now
+
+    def record_complete(self) -> int:
+        """One dispatched flush fully completed; returns the remaining
+        in-flight depth."""
+        now = time.perf_counter()
+        with self._lock:
+            if self.inflight_now > 0:
+                self.inflight_now -= 1
+            self._t_last_complete = now
+            return self.inflight_now
+
+    def record_error(self, kind: str, warn: Optional[str] = None) -> None:
+        """Count an error by kind; the first error of each kind emits
+        ``warn`` as a RuntimeWarning (once), so broken tables or
+        executables are visible instead of silently swallowed."""
+        with self._lock:
+            self.errors[kind] = self.errors.get(kind, 0) + 1
+            first = kind not in self._warned
+            self._warned.add(kind)
+        if first and warn is not None:
+            try:
+                warnings.warn(warn, RuntimeWarning, stacklevel=2)
+            except Exception:
+                # Warning filters may escalate to errors (pytest -W
+                # error) — the counter above is the durable record;
+                # never let the warning kill a worker thread.
+                pass
 
     def record_flush(self, *, n_real: int, b_pad: int, bucket_m: int,
                      sum_m: int, solve_seconds: float,
-                     reason: str) -> None:
+                     reason: str, assemble_seconds: float = 0.0) -> None:
         with self._lock:
             self.n_flushes += 1
             self.flush_reasons[reason] = (
@@ -60,6 +163,7 @@ class ServeMetrics:
             self.cells_valid += sum_m
             self.cells_total += b_pad * bucket_m
             self.solve_seconds += solve_seconds
+            self.assemble_seconds += assemble_seconds
             self._t_last = time.perf_counter()
             if self._t0 is None:
                 self._t0 = self._t_last
@@ -93,7 +197,16 @@ class ServeMetrics:
                 "throughput_lps": (self.n_solved / elapsed
                                    if elapsed > 0 else float("nan")),
                 "latency_mean_ms": mean * 1e3,
+                "latency_samples": n_lat,
+                "latency_seen": self.lat_seen,
                 "solve_seconds": self.solve_seconds,
+                "assemble_seconds": self.assemble_seconds,
+                "n_dispatched": self.n_dispatched,
+                "inflight_now": self.inflight_now,
+                "inflight_max": self.inflight_max,
+                "overlapped_dispatches": self.overlapped_dispatches,
+                "device_idle_s_est": self.device_idle_s,
+                "errors": dict(self.errors),
                 "padding_waste_problems": (
                     self.problems_padded / prob_total if prob_total
                     else 0.0),
@@ -109,20 +222,32 @@ class ServeMetrics:
 
     def format_report(self, cache_stats: Optional[Dict] = None) -> str:
         s = self.snapshot(cache_stats)
+        sampled = (f" (reservoir: {s['latency_samples']} of "
+                   f"{s['latency_seen']})"
+                   if s["latency_seen"] > s["latency_samples"] else "")
         lines = [
             f"solved {s['n_solved']} LPs in {s['n_flushes']} flushes "
             f"over {s['elapsed_s']:.2f}s "
             f"({s['throughput_lps']:.1f} LPs/s)",
             f"latency ms: p50={s['latency_p50_ms']:.2f} "
             f"p99={s['latency_p99_ms']:.2f} "
-            f"mean={s['latency_mean_ms']:.2f}",
+            f"mean={s['latency_mean_ms']:.2f}" + sampled,
             f"padding waste: problems "
             f"{100 * s['padding_waste_problems']:.1f}%  cells "
             f"{100 * s['padding_waste_cells']:.1f}%",
+            f"pipeline: {s['n_dispatched']} dispatched, max in flight "
+            f"{s['inflight_max']}, overlapped "
+            f"{s['overlapped_dispatches']}, device idle "
+            f"~{s['device_idle_s_est']:.2f}s, assemble "
+            f"{s['assemble_seconds']:.2f}s / solve "
+            f"{s['solve_seconds']:.2f}s",
             "flushes by trigger: " + (", ".join(
                 f"{k}={v}" for k, v in
                 sorted(s['flush_reasons'].items())) or "none"),
         ]
+        if s["errors"]:
+            lines.append("errors: " + ", ".join(
+                f"{k}={v}" for k, v in sorted(s["errors"].items())))
         if "cache" in s:
             c = s["cache"]
             lines.append(

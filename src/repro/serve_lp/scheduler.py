@@ -9,16 +9,40 @@ via ``with scheduler:`` or :meth:`start`).  ``flush()`` drains
 everything immediately — the deterministic path used by tests and
 step-synchronous callers like the crowd simulation.
 
-A flush assembles its super-batch *directly into the packed SoA layout*
-the device wants — one host numpy block ``L (b_pad, 4, bucket_m)`` with
-``(a_x, a_y, b, 0)`` rows — pads the batch dimension up the geometric
-ladder (see ``buckets``), fetches the executable for its
-:class:`~repro.serve_lp.buckets.ExecSpec` from the cache, solves, and
-resolves each future with an :class:`LPResult` in submission order.
-There is no AoS intermediate and no device-side repack: the executable
-consumes ``(L, c, mv)`` as assembled (``core.pack_call_count`` stays
-flat across flushes).  Solver failures propagate to every future of the
-flush via ``set_exception``.
+The serve loop is *pipelined*: a flush is three named stages instead of
+one blocking call —
+
+* **assemble** (:meth:`BatchScheduler._assemble`, on the flushing
+  thread) — lease packed host buffers from the per-bucket
+  :class:`_FlushBufferPool`, fill them directly in the SoA layout the
+  device wants (one block ``L (b_pad, 4, bucket_m)`` with
+  ``(a_x, a_y, b, 0)`` rows; no AoS intermediate, no device-side
+  repack — ``core.pack_call_count`` stays flat), and fetch the cached
+  :class:`~repro.serve_lp.sharding.Executable` for the flush's
+  :class:`~repro.serve_lp.buckets.ExecSpec`;
+* **dispatch** (:meth:`BatchScheduler._dispatch`, same thread) — hand
+  the buffers to ``Executable.dispatch`` (async: returns device-array
+  handles without synchronizing) and enqueue an :class:`_InflightFlush`
+  work unit.  Dispatch blocks while ``max_inflight`` flushes are
+  already in flight (backpressure), which is what bounds device queue
+  depth and lets the *next* flush's assembly overlap the in-flight
+  solve;
+* **complete** (the ``serve-lp-complete`` worker thread) — block on the
+  handles (``Executable.complete``), return the leased buffers to the
+  pool, record metrics, and scatter an :class:`LPResult` into every
+  future in submission order.  ``_InflightFlush.done`` is the explicit
+  per-unit join point; :meth:`drain` joins all of them.
+
+``pipeline=False`` restores the stop-and-go loop (the three stages run
+back-to-back on the flushing thread), which is still what you want for
+strictly step-synchronous callers that flush and immediately wait.
+
+Failure discipline: a solve failure reaches every future of *its own*
+flush via ``set_exception`` and never orphans another bucket — manual
+and expired flushes isolate per-bucket errors and re-raise the first
+one only after every drained bucket has been dispatched.  Completion
+failures land on the flush's futures and in the
+``ServeMetrics`` error counters (never silently swallowed).
 
 Two per-flush costs are engineered away:
 
@@ -34,12 +58,12 @@ Two per-flush costs are engineered away:
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
+import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -49,13 +73,18 @@ from repro.kernels.batch_lp import LANE
 from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
                                     bucket_m)
 from repro.serve_lp.metrics import ServeMetrics
-from repro.serve_lp.sharding import build_executable
+from repro.serve_lp.sharding import as_executable, build_executable
 from repro.solver import SolverSpec
 
 # Serving needs a concrete tile for its b_pad ladder; specs built with
 # tile=None and no tuning-table entry for the flush shape get this (the
 # historical scheduler default).
 DEFAULT_SERVE_TILE = 32
+
+# Default bound on concurrently in-flight flushes: two is enough to
+# overlap assembly with an in-flight solve without letting the device
+# queue (and tail latency) grow unboundedly.
+DEFAULT_MAX_INFLIGHT = 2
 
 
 class _FlushBufferPool:
@@ -66,13 +95,20 @@ class _FlushBufferPool:
     per-flush cost on the serving hot path.  ``lease`` hands out a
     zeroed buffer set for a shape (reusing a previously returned one
     when available — steady-state traffic on a stable bucket allocates
-    exactly once) and takes it back afterwards.  Concurrent flushes of
-    the same shape (timer thread + inline size trigger) each get their
-    own set; at most ``max_per_key`` sets are retained per shape.
+    exactly once); ``release`` takes it back.  Concurrent flushes of
+    the same shape (pipelined in-flight flushes, timer thread + inline
+    size trigger) each get their own set; at most ``max_per_key`` sets
+    are retained per shape.
 
-    Returning the buffers *after* the executable has run is safe: the
-    built executables are synchronous (they return host numpy arrays),
-    so the device is done with the transferred inputs by then.
+    **Lifetime contract (pipelined serve loop).**  A leased buffer set
+    stays leased until its flush *completes*, not merely until dispatch
+    returns: dispatch is asynchronous, so the device-side transfer of
+    the host buffers may still be in progress (or pending) when the
+    dispatching thread moves on.  Only the completion stage — after
+    ``Executable.complete`` has synchronized with the device — may call
+    :meth:`release`.  (The pre-pipelining context-manager lease that
+    returned buffers in a ``finally`` right after the solve call was
+    only sound while executables were synchronous.)
     """
 
     def __init__(self, max_per_key: int = 2):
@@ -82,27 +118,19 @@ class _FlushBufferPool:
         self.alloc_count = 0   # fresh allocations (tests assert reuse)
         self.lease_count = 0
 
-    def _take(self, key):
+    def lease(self, b_pad: int, bm: int, dtype: np.dtype
+              ) -> Tuple[tuple, tuple]:
+        """Lease an initialized ``(L, c, mv)`` set for one flush shape;
+        returns ``(key, bufs)`` — pass both back to :meth:`release`
+        when (and only when) the flush has completed."""
+        key = (b_pad, bm, np.dtype(dtype).str)
         with self._lock:
             self.lease_count += 1
             stack = self._free.get(key)
-            if stack:
-                return stack.pop()
-        return None
-
-    def _give(self, key, bufs) -> None:
-        with self._lock:
-            stack = self._free.setdefault(key, [])
-            if len(stack) < self._max_per_key:
-                stack.append(bufs)
-
-    @contextlib.contextmanager
-    def lease(self, b_pad: int, bm: int, dtype: np.dtype):
-        key = (b_pad, bm, np.dtype(dtype).str)
-        bufs = self._take(key)
-        if bufs is None:
-            with self._lock:
+            bufs = stack.pop() if stack else None
+            if bufs is None:
                 self.alloc_count += 1
+        if bufs is None:
             bufs = (np.empty((b_pad, 4, bm), dtype),
                     np.empty((b_pad, 2), dtype),
                     np.empty((b_pad, 1), np.int32))
@@ -114,10 +142,14 @@ class _FlushBufferPool:
         c[:, 0] = 1.0
         c[:, 1] = 0.0
         mv.fill(0)
-        try:
-            yield L, c, mv
-        finally:
-            self._give(key, bufs)
+        return key, bufs
+
+    def release(self, key: tuple, bufs: tuple) -> None:
+        """Return a leased set once its flush has fully completed."""
+        with self._lock:
+            stack = self._free.setdefault(key, [])
+            if len(stack) < self._max_per_key:
+                stack.append(bufs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +179,32 @@ class _Pending:
     t_submit: float
 
 
+@dataclasses.dataclass
+class _InflightFlush:
+    """One named in-flight flush work unit: everything the completion
+    stage needs to finish a dispatched solve — the leased host buffers
+    (returned to the pool only here), the device result handles, the
+    futures to scatter into, and the stage timestamps the metrics
+    report.  ``done`` is the unit's explicit join point (:meth:`
+    BatchScheduler.drain` joins all units via the in-flight gauge)."""
+
+    name: str                    # "flush-<seq> m<bucket>xb<b_pad>"
+    bucket_m: int
+    b_pad: int
+    reqs: List[_Pending]
+    reason: str
+    exe: Any                     # dispatch/complete executable
+    buf_key: tuple               # pool lease (returned at completion)
+    bufs: tuple                  # (L, c, mv) host arrays
+    t_assemble: float            # assembly start
+    t_dispatch: float = 0.0      # dispatch enqueued (device handed work)
+    t_complete: float = 0.0      # device results materialized on host
+    handle: Any = None           # in-flight device result handle
+    counted: bool = False        # holds an in-flight slot (pipelined)
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+
 class BatchScheduler:
     """Accumulate single 2-D LPs into bucketed super-batches and solve.
 
@@ -171,6 +229,14 @@ class BatchScheduler:
     max_wait_s:
         wait trigger — no request waits longer than this once the
         background thread is running.
+    pipeline:
+        overlap flush assembly with in-flight solves (default).  A
+        flush's dispatch returns without synchronizing and a completion
+        worker scatters results; ``False`` restores the stop-and-go
+        loop where each flush blocks until its results are scattered.
+    max_inflight:
+        backpressure bound — a new dispatch blocks while this many
+        flushes are already in flight (pipelined mode only).
     devices:
         device list to shard flushes over; default ``jax.devices()``.
     """
@@ -187,11 +253,15 @@ class BatchScheduler:
         M: Optional[float] = None,
         normalize: Optional[bool] = None,
         interpret: Optional[bool] = None,
+        pipeline: bool = True,
+        max_inflight: int = DEFAULT_MAX_INFLIGHT,
         devices: Optional[Sequence] = None,
         metrics: Optional[ServeMetrics] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} < 1")
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight={max_inflight} < 1")
         legacy = {k: v for k, v in dict(
             backend=method, tile=tile, chunk=chunk, M=M,
             normalize=normalize, interpret=interpret).items()
@@ -228,6 +298,8 @@ class BatchScheduler:
         self._dtype = np.dtype(spec.dtype)
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.pipeline = bool(pipeline)
+        self.max_inflight = max_inflight
         # Only the Pallas kernel needs LANE-multiple constraint counts;
         # the dense solvers bucket on a finer ladder so tiny LPs are not
         # padded 16x (crowd_sim submits m=8).
@@ -243,6 +315,21 @@ class BatchScheduler:
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._closed = False
+        # Pipelined-flush state: the in-flight gauge (guarded by its
+        # condition variable — dispatch backpressure and drain() both
+        # wait on it), the completion work queue, and the lazily
+        # started completion worker.  `_active` counts flushes in *any*
+        # stage (assemble included, reserved while the queue pop is
+        # still lock-held), which is what makes drain() a real join —
+        # `_inflight` alone would miss a flush between pop and
+        # dispatch.
+        self._active = 0
+        self._inflight = 0
+        self._inflight_cv = threading.Condition()
+        self._work_q: "queue.Queue[Optional[_InflightFlush]]" = \
+            queue.Queue()
+        self._completer: Optional[threading.Thread] = None
+        self._flush_seq = 0
 
     # Legacy attribute views (pre-SolverSpec callers/reporting).
     @property
@@ -280,6 +367,12 @@ class BatchScheduler:
         pinned tile differs (tuned entries) pad on their own unit."""
         return self.tile * len(self._devices)
 
+    @property
+    def inflight(self) -> int:
+        """Flushes currently dispatched but not yet completed."""
+        with self._inflight_cv:
+            return self._inflight
+
     def _pin_for_bucket(self, bm: int, batch: int) -> SolverSpec:
         """The fully shape-resolved spec one bucket's flush runs with:
         explicit spec values win, then the measured tuning table at
@@ -300,8 +393,6 @@ class BatchScheduler:
         c = np.asarray(c, dt).reshape(2)
         if m < 1:
             raise ValueError("LP needs at least one constraint")
-        if self._closed:
-            raise RuntimeError("scheduler is closed")
         fut: Future = Future()
         req = _Pending(ax=np.ascontiguousarray(A[:, 0]),
                        ay=np.ascontiguousarray(A[:, 1]),
@@ -311,12 +402,24 @@ class BatchScheduler:
         self.metrics.touch_clock()
         ready = None
         with self._lock:
+            # Closed-ness is decided under the same lock close() takes
+            # *before* its final flush: a submit either loses the race
+            # (raises here) or its request is visible to that flush —
+            # no request can slip in after the final flush with no
+            # timer thread left to serve it.
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
             q = self._queues.setdefault(bm, [])
             q.append(req)
             if len(q) >= self.max_batch:
                 ready = self._queues.pop(bm)
+                # Reserve the flush in the active count while the pop
+                # is still lock-held, so a concurrent close()'s drain
+                # cannot slip between pop and dispatch and miss it.
+                with self._inflight_cv:
+                    self._active += 1
         if ready is not None:
-            self._solve(bm, ready, reason="size")
+            self._solve(bm, ready, reason="size", pre_counted=True)
         return fut
 
     def submit_many(self, As, bs, cs, m_valid=None) -> List[Future]:
@@ -336,14 +439,29 @@ class BatchScheduler:
     # -- flushing --------------------------------------------------------
 
     def flush(self) -> int:
-        """Drain all buckets now (manual trigger); returns LPs solved."""
+        """Drain all buckets now (manual trigger); returns LPs solved
+        (dispatched — use :meth:`drain` or the futures to wait for
+        completion in pipelined mode).
+
+        One bucket's failure never orphans another's futures: every
+        drained bucket is dispatched regardless, each failure lands on
+        its own flush's futures, and the first error is re-raised only
+        after the loop.
+        """
         with self._lock:
             drained = [(bm, q) for bm, q in self._queues.items() if q]
             self._queues = {}
         n = 0
+        first_err: Optional[BaseException] = None
         for bm, reqs in drained:
-            self._solve(bm, reqs, reason="manual")
+            try:
+                self._solve(bm, reqs, reason="manual")
+            except Exception as e:
+                if first_err is None:
+                    first_err = e
             n += len(reqs)
+        if first_err is not None:
+            raise first_err
         return n
 
     def pending(self) -> int:
@@ -358,8 +476,17 @@ class BatchScheduler:
                 if q and now - q[0].t_submit >= self.max_wait_s]
             for bm, _ in expired:
                 self._queues.pop(bm)
+        first_err: Optional[BaseException] = None
         for bm, reqs in expired:
-            self._solve(bm, reqs, reason="wait")
+            try:
+                self._solve(bm, reqs, reason="wait")
+            except Exception as e:
+                # The failing bucket's futures already carry e; keep
+                # flushing the remaining buckets so none are orphaned.
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
 
     # -- background wait-trigger thread ----------------------------------
 
@@ -372,12 +499,22 @@ class BatchScheduler:
         return self
 
     def stop(self, *, final_flush: bool = True) -> None:
+        """Stop the timer thread, optionally flush the tail, and join
+        every in-flight flush (quiescent on return)."""
         if self._thread is not None:
             self._stop.set()
             self._thread.join()
             self._thread = None
         if final_flush:
             self.flush()
+        self.drain()
+
+    def drain(self, timeout: Optional[float] = 600.0) -> None:
+        """Join point: block until every flush in any stage (assemble,
+        dispatch, in flight) has completed or failed."""
+        with self._inflight_cv:
+            self._inflight_cv.wait_for(lambda: self._active == 0,
+                                       timeout=timeout)
 
     def __enter__(self) -> "BatchScheduler":
         return self.start()
@@ -386,63 +523,214 @@ class BatchScheduler:
         self.stop()
 
     def close(self) -> None:
+        """Permanently shut down: refuse new submissions, flush and
+        resolve everything already queued, join in-flight flushes and
+        stop the worker threads.
+
+        ``_closed`` is set under ``_lock`` *before* the final flush so
+        a concurrent :meth:`submit` either raises or its request is
+        caught by that flush — it can never enqueue after the final
+        flush with no timer thread left to serve it.
+        """
+        with self._lock:
+            self._closed = True
         self.stop()
-        self._closed = True
+        self._stop_completer()
 
     def _timer_loop(self) -> None:
         tick = max(self.max_wait_s / 4.0, 1e-4)
         while not self._stop.wait(tick):
             try:
                 self._flush_expired()
-            except Exception:
+            except Exception as e:
                 # The flush's futures already carry the exception; the
-                # timer must survive so later buckets still get flushed.
-                pass
+                # timer must survive so later buckets still get
+                # flushed.  But never silently: count it (surfaced in
+                # snapshot()/format_report()) and warn once.
+                self.metrics.record_error(
+                    "timer_flush",
+                    warn=f"serve_lp: background flush failed ({e!r}); "
+                         "the failing flush's futures carry the "
+                         "exception and the timer thread is still "
+                         "running (counted in ServeMetrics errors)")
 
-    # -- the solve path --------------------------------------------------
+    # -- the pipelined solve path ----------------------------------------
 
-    def _solve(self, bm: int, reqs: List[_Pending], *, reason: str) -> None:
+    def _solve(self, bm: int, reqs: List[_Pending], *, reason: str,
+               pre_counted: bool = False) -> None:
+        """Flush one bucket: assemble, dispatch and — pipelined — hand
+        completion to the worker.  Errors on the assemble/dispatch path
+        reach every future of this flush and re-raise."""
+        if not pre_counted:
+            with self._inflight_cv:
+                self._active += 1
+        try:
+            unit = self._assemble(bm, reqs, reason)
+            self._dispatch(unit)
+        except Exception as e:  # propagate to every waiter, don't hang
+            with self._inflight_cv:
+                self._active -= 1
+                self._inflight_cv.notify_all()
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            raise
+        if not self.pipeline:
+            err = self._complete_unit(unit)
+            if err is not None:
+                raise err
+
+    def _assemble(self, bm: int, reqs: List[_Pending],
+                  reason: str) -> _InflightFlush:
+        """Host-side stage: lease packed buffers, fill them directly in
+        the SoA layout (neutral columns/problems are a_x = a_y = 0,
+        b = PAD_B, c = (1, 0), m_valid = 0 — no AoS intermediate, no
+        device-side re-stack) and resolve the executable."""
         B = len(reqs)
         pinned = self._pin_for_bucket(bm, B)
         b_pad = bucket_batch(B, pinned.tile * len(self._devices))
-        # Host-side numpy twin of core.packed: the flush is assembled
-        # *directly* into the packed (b_pad, 4, bm) block — neutral
-        # columns/problems are a_x = a_y = 0, b = PAD_B, c = (1, 0),
-        # m_valid = 0 — so the executable consumes it as-is: no AoS
-        # intermediate, no device-side re-stack.  The buffers are
-        # leased from the per-bucket pool (reused across flushes).
         spec = ExecSpec(bucket_m=bm, b_pad=b_pad, solver=pinned,
                         n_devices=len(self._devices))
+        t0 = time.perf_counter()
+        key, bufs = self.buffers.lease(b_pad, bm, self._dtype)
         try:
-            with self.buffers.lease(b_pad, bm, self._dtype) as (L, c, mv):
-                for i, r in enumerate(reqs):
-                    L[i, 0, :r.m] = r.ax
-                    L[i, 1, :r.m] = r.ay
-                    L[i, 2, :r.m] = r.b
-                    c[i] = r.c
-                    mv[i, 0] = r.m
-                fn = self.cache.get(spec)
-                t0 = time.perf_counter()
-                x, feas = fn(L, c, mv)
-                dt_solve = time.perf_counter() - t0
-        except Exception as e:  # propagate to every waiter, don't hang
-            for r in reqs:
-                r.future.set_exception(e)
+            L, c, mv = bufs
+            for i, r in enumerate(reqs):
+                L[i, 0, :r.m] = r.ax
+                L[i, 1, :r.m] = r.ay
+                L[i, 2, :r.m] = r.b
+                c[i] = r.c
+                mv[i, 0] = r.m
+            exe = as_executable(self.cache.get(spec))
+        except Exception:
+            self.buffers.release(key, bufs)
             raise
+        with self._lock:
+            self._flush_seq += 1
+            seq = self._flush_seq
+        return _InflightFlush(
+            name=f"flush-{seq} m{bm}xb{b_pad}", bucket_m=bm, b_pad=b_pad,
+            reqs=reqs, reason=reason, exe=exe, buf_key=key, bufs=bufs,
+            t_assemble=t0)
+
+    def _dispatch(self, unit: _InflightFlush) -> None:
+        """Async stage: reserve an in-flight slot (backpressure — blocks
+        while ``max_inflight`` flushes are in flight), enqueue the solve
+        on the device and hand the unit to the completion worker."""
+        if self.pipeline:
+            with self._inflight_cv:
+                self._inflight_cv.wait_for(
+                    lambda: self._inflight < self.max_inflight)
+                self._inflight += 1
+                unit.counted = True
+        L, c, mv = unit.bufs
+        try:
+            unit.handle = unit.exe.dispatch(L, c, mv)
+        except Exception:
+            self._release_slot(unit)
+            self.buffers.release(unit.buf_key, unit.bufs)
+            raise
+        unit.t_dispatch = time.perf_counter()
+        self.metrics.record_dispatch()
+        if self.pipeline:
+            self._ensure_completer()
+            self._work_q.put(unit)
+
+    def _release_slot(self, unit: _InflightFlush) -> None:
+        if unit.counted:
+            with self._inflight_cv:
+                self._inflight -= 1
+                self._inflight_cv.notify_all()
+            unit.counted = False
+
+    def _ensure_completer(self) -> None:
+        t = self._completer
+        if t is not None and t.is_alive():
+            return
+        with self._lock:
+            if self._completer is None or not self._completer.is_alive():
+                self._completer = threading.Thread(
+                    target=self._completion_loop,
+                    name="serve-lp-complete", daemon=True)
+                self._completer.start()
+
+    def _stop_completer(self) -> None:
+        t = self._completer
+        if t is not None and t.is_alive():
+            self._work_q.put(None)
+            t.join()
+        self._completer = None
+
+    def _completion_loop(self) -> None:
+        """The completion worker: finish dispatched flushes in dispatch
+        order, off the submit/assembly path."""
+        while True:
+            unit = self._work_q.get()
+            if unit is None:
+                return
+            try:
+                self._complete_unit(unit)
+            except Exception as e:   # must never die mid-queue
+                self.metrics.record_error(
+                    "completion_worker",
+                    warn=f"serve_lp: completion worker error {e!r}")
+
+    def _complete_unit(self, unit: _InflightFlush
+                       ) -> Optional[BaseException]:
+        """Join stage: block on the device results, return the leased
+        buffers (safe only now — see :class:`_FlushBufferPool`), record
+        metrics, scatter futures.  Returns the solve error, if any,
+        instead of raising (the sync path re-raises it; the worker
+        routes it to futures + error counters)."""
+        err: Optional[BaseException] = None
+        x = feas = None
+        try:
+            x, feas = unit.exe.complete(unit.handle)
+        except Exception as e:
+            err = e
+        unit.t_complete = time.perf_counter()
+        unit.handle = None
+        # Device is synchronized (or dead): the host buffers are free.
+        self.buffers.release(unit.buf_key, unit.bufs)
+        self._release_slot(unit)
+        with self._inflight_cv:
+            self._active -= 1
+            self._inflight_cv.notify_all()
+        self.metrics.record_complete()
+        if err is not None:
+            if self.pipeline:
+                self.metrics.record_error(
+                    "solve",
+                    warn=f"serve_lp: {unit.name} failed ({err!r}); its "
+                         "futures carry the exception")
+            for r in unit.reqs:
+                if not r.future.done():
+                    r.future.set_exception(err)
+            unit.done.set()
+            return err
+        B = len(unit.reqs)
         now = time.perf_counter()
-        for i, r in enumerate(reqs):
+        # Metrics before the scatter: a caller woken by future.result()
+        # observes a fully consistent snapshot (flush counted, buffers
+        # back in the pool, in-flight gauge decremented).
+        for r in unit.reqs:
+            self.metrics.record_latency(now - r.t_submit)
+        self.metrics.record_flush(
+            n_real=B, b_pad=unit.b_pad, bucket_m=unit.bucket_m,
+            sum_m=sum(r.m for r in unit.reqs),
+            solve_seconds=unit.t_complete - unit.t_dispatch,
+            assemble_seconds=unit.t_dispatch - unit.t_assemble,
+            reason=unit.reason)
+        for i, r in enumerate(unit.reqs):
             xi = np.asarray(x[i])
             r.future.set_result(LPResult(
                 x=xi,
                 feasible=bool(feas[i]),
                 objective=float(r.c @ xi),
                 m=r.m,
-                bucket_m=bm,
+                bucket_m=unit.bucket_m,
                 batch_size=B,
                 latency_s=now - r.t_submit,
             ))
-            self.metrics.record_latency(now - r.t_submit)
-        self.metrics.record_flush(
-            n_real=B, b_pad=b_pad, bucket_m=bm,
-            sum_m=sum(r.m for r in reqs), solve_seconds=dt_solve,
-            reason=reason)
+        unit.done.set()
+        return None

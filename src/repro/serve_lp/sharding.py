@@ -1,4 +1,4 @@
-"""Executable builder: one ExecSpec -> one device-spanning solver fn.
+"""Executable builder: one ExecSpec -> one dispatch/complete Executable.
 
 Single device: a ``jax.jit`` closure over the spec.  Multiple devices:
 ``jax.pmap`` over the leading (device) axis — the flushed super-batch is
@@ -8,18 +8,33 @@ problems), and results gather back to host order.  The scheduler
 guarantees ``b_pad % (tile * n_devices) == 0`` so every shard is a whole
 number of kernel tiles.
 
-The built callable takes the scheduler's packed host buffers
-``(L (B, 4, m), c (B, 2), mv (B, 1))`` already padded to the spec's
-shapes and returns numpy ``(x (B, 2), feasible (B,) bool)`` — host-side
-because the scheduler scatters the rows straight into per-request
-futures.  The packed block transfers and shards as one contiguous
-array; the solve wraps it in a :class:`~repro.core.packed.PackedLPBatch`
-view (no repack) and runs the same :func:`repro.solver.solve_with_spec`
-core as every other entry point.
+Built executables are *two-stage* so the serve loop can pipeline:
+
+* :meth:`Executable.dispatch` takes the scheduler's packed host buffers
+  ``(L (B, 4, m), c (B, 2), mv (B, 1))`` already padded to the spec's
+  shapes and returns an opaque handle (device arrays).  JAX dispatch is
+  asynchronous, so the call returns while the solve is still in flight
+  — nothing on this path materializes host numpy.
+* :meth:`Executable.complete` blocks until the device is done and
+  materializes host numpy ``(x (B, 2), feasible (B,) bool)`` — the
+  scheduler's completion worker scatters those rows straight into
+  per-request futures.
+
+Calling the executable like a function composes the two stages
+synchronously (the pre-pipelining contract; tests and one-off callers
+use it).  On backends where XLA honours buffer donation (GPU/TPU) the
+packed ``L`` block is donated, killing the device-side defensive copy
+of the largest flush input; CPU ignores donation with a warning, so it
+is gated off there.
+
+The solve wraps the packed block in a
+:class:`~repro.core.packed.PackedLPBatch` view (no repack) and runs the
+same :func:`repro.solver.solve_with_spec` core as every other entry
+point.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -27,6 +42,11 @@ import numpy as np
 from repro.core.packed import PackedLPBatch
 from repro.serve_lp.buckets import ExecSpec
 from repro.solver import solve_with_spec
+
+# Platforms where XLA actually honours input buffer donation; CPU
+# ignores it (with a "donated buffers were not usable" warning), so
+# donation is gated to keep test/CI logs clean.
+_DONATING_PLATFORMS = ("gpu", "tpu", "cuda", "rocm")
 
 
 def _make_solve(spec: ExecSpec) -> Callable:
@@ -43,12 +63,58 @@ def _make_solve(spec: ExecSpec) -> Callable:
     return solve
 
 
+class Executable:
+    """A compiled flush solver split into dispatch and complete stages.
+
+    ``dispatch(L, c, mv)`` enqueues the solve and returns an opaque
+    handle without synchronizing; ``complete(handle)`` blocks until the
+    device is done and returns host numpy ``(x, feasible)``.  The
+    object is also callable — ``exe(L, c, mv)`` is the synchronous
+    composition of the two stages.
+
+    ``donated`` records whether the packed ``L`` input is donated to
+    XLA (its device buffer is reused for outputs; the *host* buffer is
+    unaffected and still owned by the flush-buffer pool until the
+    flush completes).
+    """
+
+    __slots__ = ("_dispatch", "_complete", "donated")
+
+    def __init__(self, dispatch: Callable, complete: Callable, *,
+                 donated: bool = False):
+        self._dispatch = dispatch
+        self._complete = complete
+        self.donated = donated
+
+    def dispatch(self, L, c, mv) -> Any:
+        """Enqueue the solve; returns the in-flight result handle."""
+        return self._dispatch(L, c, mv)
+
+    def complete(self, handle) -> Tuple[np.ndarray, np.ndarray]:
+        """Block until ``handle``'s solve finishes; host ``(x, feas)``."""
+        return self._complete(handle)
+
+    def __call__(self, L, c, mv) -> Tuple[np.ndarray, np.ndarray]:
+        return self.complete(self.dispatch(L, c, mv))
+
+
+def as_executable(fn) -> Executable:
+    """Adapt a plain synchronous callable to the dispatch/complete
+    protocol: its whole solve runs at dispatch time and ``complete`` is
+    the identity.  Objects already exposing ``dispatch``/``complete``
+    (built :class:`Executable`\\ s, test doubles) pass through unchanged,
+    so injected caches keep working in the pipelined serve loop."""
+    if hasattr(fn, "dispatch") and hasattr(fn, "complete"):
+        return fn
+    return Executable(fn, lambda handle: handle)
+
+
 def build_executable(
     spec: ExecSpec,
     devices: Optional[Sequence[jax.Device]] = None,
-) -> Callable:
-    """Compile-on-first-call solver for one spec.  ``devices`` defaults to
-    ``jax.devices()``; a single device falls back to plain jit."""
+) -> Executable:
+    """Compile-on-first-call solver for one spec.  ``devices`` defaults
+    to ``jax.devices()``; a single device falls back to plain jit."""
     devices = list(devices) if devices is not None else jax.devices()
     if len(devices) != spec.n_devices:
         raise ValueError(
@@ -56,25 +122,30 @@ def build_executable(
             f"{len(devices)}")
     solve = _make_solve(spec)
     D = spec.n_devices
+    donate = all(d.platform in _DONATING_PLATFORMS for d in devices)
+    donate_kw = {"donate_argnums": (0,)} if donate else {}
 
     if D == 1:
-        jitted = jax.jit(solve)
+        jitted = jax.jit(solve, **donate_kw)
 
-        def run(L, c, mv):
-            x, feas = jitted(L, c, mv)
+        def complete(handle):
+            x, feas = handle
             return np.asarray(x), np.asarray(feas)
 
-        return run
+        return Executable(jitted, complete, donated=donate)
 
-    pmapped = jax.pmap(solve, devices=devices)
+    pmapped = jax.pmap(solve, devices=devices, **donate_kw)
     per = spec.b_pad // D
 
     def shard(a):
         return a.reshape((D, per) + a.shape[1:])
 
-    def run(L, c, mv):
-        x, feas = pmapped(shard(L), shard(c), shard(mv))
+    def dispatch(L, c, mv):
+        return pmapped(shard(L), shard(c), shard(mv))
+
+    def complete(handle):
+        x, feas = handle
         return (np.asarray(x).reshape(spec.b_pad, 2),
                 np.asarray(feas).reshape(spec.b_pad))
 
-    return run
+    return Executable(dispatch, complete, donated=donate)

@@ -1,6 +1,8 @@
-"""Serving subsystem tests: bucketing math, flush policies, executable
-cache accounting, round-trip equivalence with the direct solvers, and
-multi-device sharding (out-of-process)."""
+"""Serving subsystem tests: bucketing math, flush policies, pipelined
+dispatch/completion (overlap, backpressure, buffer-lease audit, failure
+isolation), executable cache accounting, round-trip equivalence with
+the direct solvers, and multi-device sharding (out-of-process)."""
+import threading
 import time
 
 import jax
@@ -12,9 +14,11 @@ from repro.core import (concat_batches, make_batch, pack_call_count,
                         split_batch)
 from repro.kernels import ops
 from repro.serve_lp import (BatchScheduler, ExecSpec, ExecutableCache,
-                            ServeMetrics, SolverSpec, bucket_batch,
-                            bucket_m, shape_ladder)
+                            ServeMetrics, SolverSpec, as_executable,
+                            bucket_batch, bucket_m, build_executable,
+                            shape_ladder)
 from repro.serve_lp.bench import BenchConfig, make_request, run_traffic
+from repro.serve_lp.scheduler import _FlushBufferPool
 
 
 def _mixed_requests(seed=0, ms=(3, 8, 37, 128, 130, 200), reps=2):
@@ -168,10 +172,23 @@ def test_size_triggered_flush():
     sched = BatchScheduler(max_batch=4, tile=8)
     reqs = _mixed_requests(ms=(9, 10, 11, 12), reps=1)  # one bucket (16)
     futs = [sched.submit(*r) for r in reqs]
-    # 4th submit hit max_batch: solved inline, no flush()/thread needed
-    assert all(f.done() for f in futs)
+    # 4th submit hit max_batch: dispatched inline, no flush()/thread
+    # needed; the completion worker resolves the futures
+    for f in futs:
+        f.result(timeout=60.0)
     assert sched.pending() == 0
     assert sched.metrics.flush_reasons == {"size": 1}
+
+
+def test_size_triggered_flush_sync_mode():
+    """pipeline=False restores the stop-and-go contract: a size-
+    triggered flush completes before submit returns."""
+    sched = BatchScheduler(max_batch=4, tile=8, pipeline=False)
+    futs = [sched.submit(*r) for r in
+            _mixed_requests(ms=(9, 10, 11, 12), reps=1)]
+    assert all(f.done() for f in futs)
+    assert sched.metrics.flush_reasons == {"size": 1}
+    assert sched.metrics.inflight_now == 0
 
 
 def test_wait_triggered_flush():
@@ -191,6 +208,8 @@ def test_manual_flush_and_pending():
     assert sched.pending() == len(futs)
     n = sched.flush()
     assert n == len(futs)
+    assert sched.pending() == 0
+    sched.drain()          # flush() dispatches; drain() is the join
     assert all(f.done() for f in futs)
 
 
@@ -417,6 +436,207 @@ def test_timer_thread_survives_solver_error():
         sched._stop.set()
         sched._thread.join()
         sched._thread = None
+    # the swallowed-and-counted timer errors are surfaced, not silent
+    snap = sched.metrics.snapshot()
+    assert snap["errors"].get("timer_flush", 0) >= 1
+    assert "errors" in snap and "timer_flush" in \
+        sched.metrics.format_report()
+
+
+def _selective_failing_builder(fail_bucket_m):
+    """Builder failing only for one m-bucket; others build for real."""
+    def build(spec):
+        if spec.bucket_m == fail_bucket_m:
+            raise ValueError(f"injected failure for bucket "
+                             f"{spec.bucket_m}")
+        return build_executable(spec, jax.devices())
+    return build
+
+
+@pytest.mark.parametrize("pipeline", [True, False])
+def test_multi_bucket_flush_failure_isolated(pipeline):
+    """One bucket's failing solve must not orphan the other buckets'
+    futures: every future of the flush resolves (result or exception)
+    and the first error still reaches the flush() caller."""
+    sched = BatchScheduler(max_batch=1000, tile=8, pipeline=pipeline)
+    sched.cache = ExecutableCache(_selective_failing_builder(16))
+    # three buckets, dict order 8 -> 16 -> 128: the failure sits in the
+    # middle so both an earlier and a later bucket must survive it
+    f_ok1 = sched.submit(*_mixed_requests(ms=(5,), reps=1)[0])    # 8
+    f_bad = sched.submit(*_mixed_requests(ms=(9,), reps=1)[0])    # 16
+    f_ok2 = sched.submit(*_mixed_requests(ms=(70,), reps=1)[0])   # 128
+    with pytest.raises(ValueError, match="injected failure"):
+        sched.flush()
+    assert f_ok1.result(timeout=60.0).feasible in (True, False)
+    assert f_ok2.result(timeout=60.0).feasible in (True, False)
+    assert isinstance(f_bad.exception(timeout=60.0), ValueError)
+
+
+def test_close_refuses_new_submits_and_resolves_queued():
+    sched = BatchScheduler(max_batch=1000, tile=8)
+    futs = [sched.submit(*r) for r in _mixed_requests(reps=1)]
+    sched.close()
+    for f in futs:
+        assert f.result(timeout=60.0) is not None
+    with pytest.raises(RuntimeError, match="closed"):
+        sched.submit(*_mixed_requests(ms=(5,), reps=1)[0])
+    # close is idempotent
+    sched.close()
+
+
+def test_close_vs_submit_race_never_orphans():
+    """Hammer close() against concurrent submit(): every future handed
+    out must resolve — a submit either loses the race (raises) or its
+    request is caught by the final flush.  Regression test for the
+    pre-fix ordering where `_closed` was set only *after* the final
+    flush, so a request could enqueue with no flusher left alive."""
+    req = _mixed_requests(ms=(9,), reps=1)[0]
+    for _ in range(5):
+        sched = BatchScheduler(max_batch=8, max_wait_s=0.001, tile=8)
+        sched.start()
+        futs, lock = [], threading.Lock()
+
+        def submitter():
+            while True:
+                try:
+                    f = sched.submit(*req)
+                except RuntimeError:
+                    return
+                with lock:
+                    futs.append(f)
+
+        threads = [threading.Thread(target=submitter) for _ in range(3)]
+        for t in threads:
+            t.start()
+        time.sleep(0.02)
+        sched.close()
+        for t in threads:
+            t.join(timeout=60.0)
+            assert not t.is_alive(), "submitter never saw the close"
+        for f in futs:
+            f.result(timeout=60.0)   # must never hang: no orphans
+
+
+# -- the pipelined serve loop --------------------------------------------
+
+
+class _SlowCompleteExec:
+    """Wrap a real executable so completion takes a deterministic
+    minimum time — makes overlap/backpressure observable on CPU."""
+
+    def __init__(self, inner, delay_s):
+        self.inner = inner
+        self.delay_s = delay_s
+
+    def dispatch(self, L, c, mv):
+        return self.inner.dispatch(L, c, mv)
+
+    def complete(self, handle):
+        time.sleep(self.delay_s)
+        return self.inner.complete(handle)
+
+
+class _AuditPool(_FlushBufferPool):
+    """Pool that records lease/release interleaving: a buffer set may
+    never be leased out twice without an intervening release."""
+
+    def __init__(self):
+        super().__init__()
+        self._audit_lock = threading.Lock()
+        self._out = set()
+        self.max_outstanding = 0
+        self.violations = 0
+
+    def lease(self, b_pad, bm, dtype):
+        key, bufs = super().lease(b_pad, bm, dtype)
+        with self._audit_lock:
+            bid = id(bufs[0])
+            if bid in self._out:
+                self.violations += 1
+            self._out.add(bid)
+            self.max_outstanding = max(self.max_outstanding,
+                                       len(self._out))
+        return key, bufs
+
+    def release(self, key, bufs):
+        with self._audit_lock:
+            self._out.discard(id(bufs[0]))
+        super().release(key, bufs)
+
+
+def test_pipelined_overlap_backpressure_and_buffers():
+    """The tentpole contract: with a slow solve, (a) >= 2 flushes are
+    concurrently in flight but never more than max_inflight, (b) a
+    leased buffer set is never reused while its flush is in flight,
+    (c) results still scatter in submission order and match the direct
+    solver."""
+    spec = SolverSpec(backend="rgb", tile=8)
+    sched = BatchScheduler(spec, max_batch=4, max_inflight=2)
+    sched.cache = ExecutableCache(
+        lambda s: _SlowCompleteExec(build_executable(s, jax.devices()),
+                                    0.05))
+    sched.buffers = _AuditPool()
+    reqs = _mixed_requests(ms=(9, 10, 11, 12), reps=4)  # one bucket (16)
+    futs = [sched.submit(*r) for r in reqs]             # 4 size flushes
+    results = [f.result(timeout=120.0) for f in futs]
+    sched.drain()
+    snap = sched.metrics.snapshot()
+    # (a) overlap happened and the depth bound held
+    assert snap["inflight_max"] == 2, snap
+    assert snap["overlapped_dispatches"] >= 1
+    assert snap["inflight_now"] == 0
+    assert snap["n_dispatched"] == 4
+    # the device-idle estimate exists and is bounded by the elapsed time
+    assert 0.0 <= snap["device_idle_s_est"] <= snap["elapsed_s"] + 1.0
+    # (b) the buffer audit: concurrent flushes used disjoint buffer
+    # sets (>= 2 live at once), never a leased one
+    assert sched.buffers.violations == 0
+    assert sched.buffers.max_outstanding >= 2
+    assert sched.buffers.lease_count == 4
+    # assembly overlapping in-flight solves => more than one set was
+    # allocated, but backpressure bounds it to max_inflight + 1
+    assert 2 <= sched.buffers.alloc_count <= 3
+    # (c) submission-order scatter, bit-identical to the direct solver
+    solver = spec.build()
+    for (A, b, c), r in zip(reqs, results):
+        direct = solver.solve(make_batch(A, b, c))
+        assert bool(direct.feasible[0]) == r.feasible
+        np.testing.assert_array_equal(np.asarray(direct.x[0]), r.x)
+
+
+def test_pipelined_solve_failure_reaches_futures_not_flush_caller():
+    """A failure surfacing at completion (after dispatch) lands on the
+    flush's futures and the error counter — flush() itself already
+    returned."""
+    class _FailingComplete:
+        def dispatch(self, L, c, mv):
+            return "handle"
+
+        def complete(self, handle):
+            raise RuntimeError("injected completion failure")
+
+    sched = BatchScheduler(max_batch=1000, tile=8)
+    sched.cache = ExecutableCache(lambda s: _FailingComplete())
+    f = sched.submit(*_mixed_requests(ms=(5,), reps=1)[0])
+    sched.flush()          # dispatch succeeds; no raise here
+    assert isinstance(f.exception(timeout=60.0), RuntimeError)
+    sched.drain()
+    assert sched.metrics.snapshot()["errors"].get("solve", 0) == 1
+
+
+def test_as_executable_adapts_plain_callables():
+    calls = []
+
+    def sync_fn(L, c, mv):
+        calls.append(L.shape)
+        return "x", "feas"
+
+    exe = as_executable(sync_fn)
+    assert exe.complete(exe.dispatch(np.zeros((2, 4, 8)), None, None)) \
+        == ("x", "feas")
+    assert calls == [(2, 4, 8)]
+    # real executables and test doubles pass through unchanged
+    assert as_executable(exe) is exe
 
 
 # -- metrics -------------------------------------------------------------
@@ -432,6 +652,43 @@ def test_metrics_percentiles():
     s = m.snapshot()
     assert s["padding_waste_problems"] == pytest.approx(5 / 8)
     assert s["padding_waste_cells"] == pytest.approx(1 - 30 / (8 * 128))
+
+
+def test_latency_reservoir_stays_uniform():
+    """Past capacity the reservoir keeps sampling (deterministically,
+    no `random` on the hot path) instead of freezing on the first k
+    samples — late-run latencies must stay represented."""
+    m = ServeMetrics(max_latency_samples=100)
+    n = 5000
+    for v in range(n):
+        m.record_latency(float(v))
+    s = m.snapshot()
+    assert s["latency_seen"] == n
+    assert s["latency_samples"] == 100
+    kept = sorted(m._latencies)
+    # uniform reservoir: the second half of the run is represented
+    # (a capped list would hold only 0..99, median would be ~50)
+    assert sum(1 for v in kept if v >= n / 2) >= 20
+    assert m.percentile(50.0) > n * 0.2
+    # deterministic: same stream -> same reservoir
+    m2 = ServeMetrics(max_latency_samples=100)
+    for v in range(n):
+        m2.record_latency(float(v))
+    assert m2._latencies == m._latencies
+    # the report names the sampling so percentiles aren't over-read
+    assert "reservoir: 100 of 5000" in m.format_report()
+
+
+def test_error_counter_and_one_time_warning():
+    m = ServeMetrics()
+    with pytest.warns(RuntimeWarning, match="broken thing"):
+        m.record_error("timer_flush", warn="broken thing happened")
+    # second error of the same kind counts but does not warn again
+    m.record_error("timer_flush", warn="broken thing happened")
+    m.record_error("solve")
+    s = m.snapshot()
+    assert s["errors"] == {"timer_flush": 2, "solve": 1}
+    assert "timer_flush=2" in m.format_report()
 
 
 def test_bench_traffic_deterministic():
@@ -450,6 +707,10 @@ def test_bench_smoke_tiny():
     assert snap["cache"]["misses"] >= 1
     assert 0.0 <= snap["padding_waste_cells"] < 1.0
     assert np.isfinite(snap["latency_p99_ms"])
+    # pipelined loop fully quiesced, every dispatch completed
+    assert snap["inflight_now"] == 0
+    assert snap["n_dispatched"] == snap["n_flushes"]
+    assert snap["errors"] == {}
 
 
 # -- multi-device sharding (out-of-process, forced host devices) ---------
