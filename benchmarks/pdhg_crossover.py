@@ -1,0 +1,132 @@
+"""Kernel-vs-PDHG crossover sweep: where does first-order win?
+
+The exact Seidel backends are expected-O(batch * m) with a tiny
+constant but scan every constraint per problem; restarted PDHG pays a
+per-iteration matvec yet its iteration count is shape-independent, so
+past some constraint count the first-order backend overtakes the exact
+ones.  This sweep times both on the same packed batches over an ``m``
+ladder into the thousands and emits one JSON row per (backend, m) —
+the measured crossover is exactly what ``backend="auto"`` routes on
+once ``benchmarks/tune_cli.py`` folds these shapes into the table.
+
+``--smoke`` is the CI contract: a CI-sized sweep plus two asserts —
+(1) PDHG *converges* (per-problem certificate from
+``solve_pdhg_with_stats``, not just a feasible flag) at the largest
+smoke ``m``, and (2) auto resolution actually selects pdhg with the
+recorded schedule when a table says it is fastest at large ``m``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import random_feasible_lp
+from repro.core.packed import pack
+from repro.pdhg import solve_pdhg_with_stats
+from repro.solver import SolverSpec
+from repro.tune.table import (TableEntry, TableKey, TuningTable,
+                              current_device_kind, use_table)
+
+SMOKE_MS = (64, 256, 1024)
+FULL_MS = (64, 256, 1024, 2048, 4096, 8192)
+
+
+def _assert_auto_routes_to_pdhg(m_big: int, batch: int) -> SolverSpec:
+    """Synthetic-table check that auto routing can pick pdhg: with a
+    table recording pdhg fastest at ``m_big`` (and kernel fastest at a
+    small bucket), ``backend="auto"`` must resolve to pdhg there with
+    the entry's (iter_block, restart_period) — and still route the
+    small bucket to kernel."""
+    kind = current_device_kind()
+    mk = lambda be, mb, t, ch, us: TableEntry(  # noqa: E731
+        TableKey(kind, be, "float32", mb, 0), tile=t, chunk=ch,
+        us_per_lp=us)
+    from repro.tune.table import M_BUCKET_BASE, bucket_pow2
+    mb_small, mb_big = 64, bucket_pow2(m_big, M_BUCKET_BASE)
+    table = TuningTable([
+        mk("kernel", mb_small, 8, 0, 1.0),
+        mk("pdhg", mb_small, 64, 512, 50.0),
+        mk("kernel", mb_big, 8, 0, 900.0),
+        mk("pdhg", mb_big, 128, 2048, 30.0),
+    ])
+    with use_table(table):
+        small = SolverSpec(backend="auto").resolve_for_shape(64, batch)
+        big = SolverSpec(backend="auto").resolve_for_shape(m_big, batch)
+    assert small.backend == "kernel", (
+        f"auto at m=64 picked {small.backend!r}, expected kernel")
+    assert big.backend == "pdhg", (
+        f"auto at m={m_big} picked {big.backend!r}, expected pdhg")
+    assert (big.iter_block, big.restart_period) == (128, 2048), (
+        f"auto did not pin the recorded pdhg schedule: "
+        f"({big.iter_block}, {big.restart_period})")
+    return big
+
+
+def run(full: bool = False, smoke: bool = False):
+    ms = FULL_MS if full else SMOKE_MS
+    B = 256 if full else 64
+    specs = [
+        ("kernel", SolverSpec(backend="kernel")),
+        ("pdhg", SolverSpec(backend="pdhg")),
+    ]
+    rows = []
+    stats_at_biggest = None
+    for m in ms:
+        lp = random_feasible_lp(jax.random.key(7 * m + B), B, m)
+        pb = pack(lp)
+        for label, spec in specs:
+            solver = spec.build()
+            dt = time_fn(solver.solve, pb)
+            sol = solver.solve(pb)
+            ran = spec.resolve_for_shape(m, B)
+            row = {
+                "bench": "pdhg_crossover",
+                "backend": label,
+                "batch": B,
+                "m": m,
+                "seconds": dt,
+                "us_per_lp": dt / B * 1e6,
+                "n_feasible": int(np.asarray(sol.feasible).sum()),
+            }
+            if label == "pdhg":
+                row["iter_block"] = ran.iter_block
+                row["restart_period"] = ran.restart_period
+            else:
+                row["tile"] = ran.tile
+                row["chunk"] = ran.chunk
+            print(json.dumps(row), flush=True)
+            rows.append(emit(f"pdhg_crossover/b{B}/m{m}/{label}", dt,
+                             f"per_lp_us={dt/B*1e6:.2f}"))
+        if m == ms[-1]:
+            _, stats_at_biggest = solve_pdhg_with_stats(pb)
+    if smoke:
+        st = stats_at_biggest
+        conv = np.asarray(st.converged)
+        kkt = np.asarray(st.kkt)
+        assert conv.all(), (
+            f"pdhg failed to converge on {int((~conv).sum())}/{B} "
+            f"problems at m={ms[-1]} (max kkt {kkt.max():.3e})")
+        routed = _assert_auto_routes_to_pdhg(ms[-1], B)
+        print(f"pdhg_crossover --smoke ok: pdhg converged {B}/{B} at "
+              f"m={ms[-1]} (max kkt {kkt.max():.3e}); auto routed "
+              f"m={ms[-1]} -> pdhg/ib{routed.iter_block}/"
+              f"rp{routed.restart_period}")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run asserting pdhg convergence and "
+                         "auto routing")
+    args = ap.parse_args(argv)
+    run(full=args.full, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

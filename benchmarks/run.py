@@ -15,13 +15,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated names (fig3..fig7, serve, "
-                         "solver_sweep, pack_layout, tune)")
+                         "solver_sweep, pack_layout, pdhg_crossover, "
+                         "tune)")
     args = ap.parse_args()
 
     from benchmarks import (fig3_lp_size, fig4_batch, fig5_transfer,
                             fig6_reduction, fig7_naive_vs_rgb,
-                            pack_layout, serve_bench, solver_sweep,
-                            tune_cli)
+                            pack_layout, pdhg_crossover, serve_bench,
+                            solver_sweep, tune_cli)
     figs = {
         "fig3": fig3_lp_size.run,
         "fig4": fig4_batch.run,
@@ -31,6 +32,7 @@ def main() -> None:
         "serve": serve_bench.run,
         "solver_sweep": solver_sweep.run,
         "pack_layout": pack_layout.run,
+        "pdhg_crossover": pdhg_crossover.run,
         "tune": tune_cli.run,
     }
     only = set(args.only.split(",")) if args.only else set(figs)

@@ -27,8 +27,7 @@ from repro.core.packed import (
     split_packed,
     unpack,
 )
-from repro.core.seidel import (solve_batch_lp, solve_naive,
-                               solve_naive_packed, solve_rgb,
+from repro.core.seidel import (solve_naive, solve_naive_packed, solve_rgb,
                                solve_rgb_packed)
 
 __all__ = [
@@ -38,6 +37,6 @@ __all__ = [
     "pad_batch", "pad_batch_dim", "pad_packed", "pad_packed_batch_dim",
     "ragged_feasible_lp", "random_feasible_lp", "replicated_lp",
     "shuffle_batch", "shuffle_packed", "split_batch", "split_packed",
-    "solve_batch_lp", "solve_naive", "solve_naive_packed", "solve_rgb",
+    "solve_naive", "solve_naive_packed", "solve_rgb",
     "solve_rgb_packed", "unpack",
 ]

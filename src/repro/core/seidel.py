@@ -34,8 +34,7 @@ and AoS solves are bit-identical by construction.
 from __future__ import annotations
 
 import functools
-import warnings
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -256,49 +255,3 @@ def solve_rgb_packed(pb: "PackedLPBatch", *, M: float = DEFAULT_M,
     return _rgb_from_rows(pb.ax, pb.ay, pb.b, pb.c,
                           pb.m_valid.reshape(-1), M=M, tile=tile,
                           chunk=chunk)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated public entry point (shim over repro.solver)
-# ---------------------------------------------------------------------------
-
-_DEPRECATION_WARNED = False
-
-
-def solve_batch_lp(
-    batch: LPBatch,
-    *,
-    method: str = "rgb",
-    key: Optional[jax.Array] = None,
-    M: float = DEFAULT_M,
-    tile: int = 32,
-    chunk: int = 0,
-    normalize: bool = True,
-    interpret: Optional[bool] = None,
-) -> LPSolution:
-    """Deprecated: build a :class:`repro.solver.SolverSpec` instead.
-
-    This shim maps the historical ``method=`` kwargs onto an equivalent
-    spec and delegates to its process-cached
-    :class:`~repro.solver.solver.Solver`, so results are identical to
-    ``SolverSpec(...).build().solve(batch, key=key)``.  One
-    DeprecationWarning is emitted per process.  Quirk preserved for
-    compatibility: ``method="kernel"`` ignores ``tile``/``chunk`` (the
-    kernel picks a VMEM-budgeted tile), exactly as before.
-    """
-    global _DEPRECATION_WARNED
-    if not _DEPRECATION_WARNED:
-        _DEPRECATION_WARNED = True
-        warnings.warn(
-            "core.solve_batch_lp(method=...) is deprecated; use "
-            "repro.solver.SolverSpec(backend=...).build() and call "
-            ".solve(batch) on the result", DeprecationWarning,
-            stacklevel=2)
-    from repro.solver import SolverSpec, get_solver  # lazy: import cycle
-    if method == "kernel":
-        spec = SolverSpec(backend="kernel", M=M, normalize=normalize,
-                          interpret=interpret)
-    else:
-        spec = SolverSpec(backend=method, tile=tile, chunk=chunk, M=M,
-                          normalize=normalize, interpret=interpret)
-    return get_solver(spec).solve(batch, key=key)

@@ -9,15 +9,14 @@ is ``repro.solver``::
     from repro.solver import SolverSpec
     sol = SolverSpec(backend="kernel", interpret=True).build().solve(batch)
 
-This module keeps the historical entry points as thin wrappers:
+This module keeps one historical entry point as a thin wrapper:
 ``pack_constraints`` over :func:`repro.core.packed.pack` (plus the
-kernel's LANE-multiple validation) and ``solve_batch_lp_kernel`` over
-the unified spec path (note its historical ``normalize=False`` default
-— the unified API defaults to True).
+kernel's LANE-multiple validation) — the serving layer still uses it
+to pack into an explicit shape bucket.
 """
 from __future__ import annotations
 
-from repro.core.lp import LPBatch, LPSolution
+from repro.core.lp import LPBatch
 from repro.core.packed import pack, pad_packed
 from repro.kernels.batch_lp import LANE
 
@@ -41,23 +40,3 @@ def pack_constraints(batch: LPBatch, m_pad: int | None = None):
                          f">= m={m}")
     pb = pad_packed(pack(batch), m_pad)
     return pb.L, pb.c, pb.m_valid
-
-
-def solve_batch_lp_kernel(
-    batch: LPBatch,
-    *,
-    M: float = 1.0e4,
-    tile: int | None = None,
-    chunk: int = 0,
-    interpret: bool = False,
-    normalize: bool = False,
-) -> LPSolution:
-    """Compatibility wrapper: solve an LPBatch with the Pallas kernel.
-
-    Equivalent to ``SolverSpec(backend="kernel", ...)`` with this
-    module's historical defaults (``normalize=False``,
-    ``interpret=False``); prefer building that spec directly."""
-    from repro.solver import SolverSpec, get_solver
-    spec = SolverSpec(backend="kernel", tile=tile, chunk=chunk, M=M,
-                      normalize=normalize, interpret=bool(interpret))
-    return get_solver(spec).solve(batch)

@@ -1,0 +1,467 @@
+"""Restarted PDHG driver for batched 2-D LPs (cuPDLP-style).
+
+The iteration runs in fixed blocks of ``iter_block`` steps under a
+``lax.while_loop``; residuals, restarts and convergence masks are only
+evaluated at block boundaries, so the hot loop is nothing but fused
+row-form multiply-adds.  Per problem the driver keeps
+
+* a running average of the iterates since the last restart (the
+  restart *candidate* is whichever of {current, average} has the lower
+  normalized KKT score — averaging is what restores the linear rate on
+  LPs);
+* the best iterate seen so far (returned at the end, so a solve
+  interrupted by ``max_iters`` still reports its best certificate);
+* the primal weight ``omega`` (``tau = eta/omega``, ``sigma =
+  eta*omega``), re-balanced on every restart from the observed
+  primal/dual movement — cuPDLP's smoothed update, with the per-restart
+  step bounded (``OMEGA_STEP_CLAMP``) so one noisy cycle cannot swing
+  the weight by orders of magnitude and freeze the primal.
+
+Restarts fire per problem on *sufficient decay* of the KKT score
+(``<= RESTART_BETA *`` the score at the last restart, baselined at the
+actual starting point, not infinity) or on the *artificial* period
+``restart_period`` (0 disables the periodic trigger).  A cycle whose
+candidate score blows up past ``DIVERGE_FACTOR *`` the best score seen
+recovers by restarting from the best (x, y) pair with ``omega`` pulled
+back toward its initial value.  Converged problems freeze: their
+updates are masked out, so a batch only pays until its slowest member
+converges or ``max_iters`` is hit.
+
+Two 2-D-specific moves make small ragged batches robust, not just the
+large well-conditioned ones PDHG is built for:
+
+* each problem is solved in rescaled coordinates ``x' = x / s`` with
+  ``s = max(1, ||b||_inf)`` (the 2-D stand-in for cuPDLP's Ruiz
+  scaling) — generators whose optimum sits O(100) box-units from the
+  origin otherwise need O(distance) iterations just to travel there;
+* a *crossover polish* after the loop (the 2-D analogue of PDLP's
+  basis crossover): the two highest-dual rows are intersected with
+  each other and with the four box faces, and the best feasible vertex
+  replaces the iterate when it improves it.  On narrow-wedge LPs
+  (near-antiparallel active normals, Hoffman constant in the hundreds)
+  the iterate crawls but its top duals already identify the active
+  faces, so the polish lands the exact vertex.
+
+Feasibility classification matches the Seidel backends on 2-D inputs:
+an infeasible LP's primal residual is bounded away from zero, so it
+rides to ``max_iters`` and is classified by its best residual;
+"unbounded" LPs saturate the same ``M`` box the dense backends use, so
+both report the box-corner optimum.  Unlike Seidel, which is exact at
+convergence, PDHG answers carry a first-order tolerance: ``tol``
+bounds the *relative KKT residuals* of the returned point, not the
+number of correct digits of the objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import oneD
+from repro.core.lp import LPBatch, LPSolution
+from repro.core.packed import PackedLPBatch
+from repro.core.seidel import DEFAULT_M
+from repro.pdhg.iteration import (EPS_GUARD, kkt_residuals_rows,
+                                  pdhg_step, spectral_norm_rows)
+
+# Block/restart defaults; the measured tuning table overrides per shape
+# (see repro.tune.space PDHG_ITER_BLOCKS / PDHG_RESTART_PERIODS).
+DEFAULT_ITER_BLOCK = 64
+DEFAULT_RESTART_PERIOD = 1024
+
+# Sufficient-decay factor for adaptive restarts (cuPDLP uses ~0.2).
+RESTART_BETA = 0.2
+
+# Step-size safety margin: tau * sigma * ||A||^2 = STEP_SAFETY^2 < 1.
+STEP_SAFETY = 0.9
+
+# Primal-weight clamp — omega updates are multiplicative, keep them sane.
+OMEGA_MIN, OMEGA_MAX = 1e-6, 1e6
+
+# Largest multiplicative omega change one restart may apply.
+OMEGA_STEP_CLAMP = 4.0
+
+# A cycle whose candidate KKT score exceeds this multiple of the best
+# score seen AND the absolute floor is treated as diverging and
+# recovers from the best pair.  The floor keeps recovery an emergency
+# brake: near convergence the (nonmonotone) score routinely pops an
+# order of magnitude above a ~1e-8 best, and resetting omega there
+# would stall the endgame.
+DIVERGE_FACTOR = 10.0
+DIVERGE_KKT_FLOOR = 0.5
+
+# Feasibility classification threshold on the *relative* primal
+# residual.  Converged problems sit at <= tol; infeasible generators in
+# this repo sit O(1e-1) away — anything in between means "ran out of
+# iterations on a feasible problem", which we classify optimistically
+# only up to this floor (comparable to oneD.EPS_FEAS's scale).
+FEAS_EPS_REL = 1e-4
+
+
+def default_tol(dtype) -> float:
+    """Relative KKT tolerance by precision: float32 stops where its
+    rounding floor starts; float64 matches the 1e-8 cuPDLP default."""
+    return 1e-8 if jnp.dtype(dtype) == jnp.dtype("float64") else 1e-4
+
+
+def default_max_iters(dtype) -> int:
+    return 100_000 if jnp.dtype(dtype) == jnp.dtype("float64") else 20_000
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PDHGStats:
+    """Per-problem convergence certificate of a PDHG solve.
+
+    Residuals are *relative* and measured on the internally rescaled
+    problem (``b`` and the box divided by ``max(1, ||b||_inf)``), at
+    the returned (possibly crossover-polished) primal point paired
+    with the best dual iterate."""
+
+    iterations: jax.Array   # (B,) int32 iterations to convergence/stop
+    restarts: jax.Array     # (B,) int32 restarts fired
+    primal_res: jax.Array   # (B,) relative primal residual
+    dual_res: jax.Array     # (B,) relative dual (stationarity) residual
+    compl: jax.Array        # (B,) relative complementarity residual
+    kkt: jax.Array          # (B,) max of the three
+    converged: jax.Array    # (B,) bool: some iterate reached kkt <= tol
+
+
+def _solve_rows(ax, ay, bb, c, m_valid, *, M: float,
+                tol: Optional[float], max_iters: Optional[int],
+                iter_block: Optional[int],
+                restart_period: Optional[int]
+                ) -> Tuple[LPSolution, PDHGStats]:
+    """The driver over component rows; all knobs are static Python
+    scalars (None -> dtype-based default)."""
+    B, m = ax.shape
+    dt = ax.dtype
+    tol = float(default_tol(dt) if tol is None else tol)
+    max_iters = int(default_max_iters(dt) if max_iters is None
+                    else max_iters)
+    iter_block = int(DEFAULT_ITER_BLOCK if iter_block is None
+                     else iter_block)
+    restart_period = int(DEFAULT_RESTART_PERIOD if restart_period is None
+                         else restart_period)
+    Mv = jnp.asarray(M, dt)
+    c = c.astype(dt)
+    m_valid = m_valid.reshape(-1)
+
+    if m == 0:
+        # No constraints at all: the optimum is the preferred box corner
+        # (same tie-break as the Seidel backends' start point).
+        x = jax.vmap(lambda ci: oneD.box_corner(ci, Mv))(c)
+        zeros = jnp.zeros((B,), dt)
+        sol = LPSolution(x=x, feasible=jnp.ones((B,), bool),
+                         objective=jnp.einsum("bd,bd->b", c, x))
+        stats = PDHGStats(iterations=jnp.zeros((B,), jnp.int32),
+                          restarts=jnp.zeros((B,), jnp.int32),
+                          primal_res=zeros, dual_res=zeros, compl=zeros,
+                          kkt=zeros, converged=jnp.ones((B,), bool))
+        return sol, stats
+
+    # Rows at or past m_valid are forced to the neutral constraint
+    # (0, 0, 1) so ragged batches match the Seidel masking semantics
+    # even if a caller left garbage past the valid count.  The neutral
+    # row is then exactly inert: it contributes nothing to A x or
+    # A^T y, and its dual component projects to (and stays at) zero.
+    keep = jnp.arange(m)[None, :] < m_valid[:, None]
+    ax = jnp.where(keep, ax, 0.0).astype(dt)
+    ay = jnp.where(keep, ay, 0.0).astype(dt)
+    bb = jnp.where(keep, bb, 1.0).astype(dt)
+
+    # 2-D Ruiz-style rescale: solve for x' = x / s with
+    # s = max(1, ||b||_inf); an optimum O(||b||) box-units out becomes
+    # O(1) travel for the iteration, and the residuals below are
+    # measured on this rescaled problem.
+    s_scale = jnp.maximum(
+        1.0, jnp.max(jnp.where(keep, jnp.abs(bb), 0.0), axis=-1)
+    ).astype(dt)
+    bb = bb / s_scale[:, None]
+    Ms = (Mv / s_scale)[:, None]                        # (B, 1) box
+
+    # Per-problem geometry: exact ||A||_2 -> step scale eta; primal
+    # weight omega seeded from the objective/rhs balance (PDLP init).
+    norm_A = spectral_norm_rows(ax, ay)
+    eta = STEP_SAFETY / jnp.maximum(norm_A, EPS_GUARD)
+    norm_c = jnp.linalg.norm(c, axis=-1)
+    norm_b = jnp.linalg.norm(jnp.where(keep, bb, 0.0), axis=-1)
+    omega0 = jnp.clip(
+        jnp.where((norm_c > EPS_GUARD) & (norm_b > EPS_GUARD),
+                  norm_c / jnp.maximum(norm_b, EPS_GUARD), 1.0),
+        OMEGA_MIN, OMEGA_MAX).astype(dt)
+    b_scale = 1.0 + jnp.max(jnp.where(keep, jnp.abs(bb), 0.0), axis=-1)
+    c_scale = 1.0 + jnp.max(jnp.abs(c), axis=-1)
+    bound_tol = jnp.asarray(1e-6, dt) * Ms
+
+    def kkt_of(x, y):
+        pres, dres, compl = kkt_residuals_rows(
+            x, y, ax, ay, bb, c, M=Ms, b_scale=b_scale, c_scale=c_scale,
+            bound_tol=bound_tol)
+        return pres, dres, compl, jnp.maximum(pres,
+                                              jnp.maximum(dres, compl))
+
+    x0 = jnp.zeros((B, 2), dt)
+    y0 = jnp.zeros((B, m), dt)
+    big = jnp.asarray(jnp.finfo(dt).max, dt)
+    _, _, _, kkt0 = kkt_of(x0, y0)
+    state = dict(
+        it=jnp.asarray(0, jnp.int32),
+        x=x0, y=y0,
+        # running average since last restart
+        x_sum=jnp.zeros_like(x0), y_sum=jnp.zeros_like(y0),
+        n_avg=jnp.zeros((B,), dt),
+        # last-restart snapshot (omega update + decay baseline; the
+        # baseline starts at the actual initial score — an infinite
+        # baseline would fire the decay trigger on the very first
+        # block and let one noisy cycle set omega)
+        x_rs=x0, y_rs=y0, kkt_rs=kkt0,
+        cycle=jnp.zeros((B,), jnp.int32),
+        omega=omega0,
+        active=jnp.ones((B,), bool),
+        # best-so-far certificate
+        best_x=x0, best_y=y0, best_kkt=jnp.full((B,), big, dt),
+        best_pres=jnp.full((B,), big, dt),
+        best_dres=jnp.full((B,), big, dt),
+        best_compl=jnp.full((B,), big, dt),
+        iters_done=jnp.zeros((B,), jnp.int32),
+        restarts=jnp.zeros((B,), jnp.int32),
+    )
+
+    def cond(s):
+        return (s["it"] < max_iters) & jnp.any(s["active"])
+
+    def body(s):
+        act = s["active"]
+        actc = act[:, None]
+        tau = eta / s["omega"]
+        sigma = eta * s["omega"]
+
+        def inner(_, carry):
+            x, y, x_sum, y_sum, n_avg = carry
+            x_new, y_new = pdhg_step(x, y, ax, ay, bb, c, tau, sigma, Ms)
+            x = jnp.where(actc, x_new, x)
+            y = jnp.where(actc, y_new, y)
+            x_sum = x_sum + jnp.where(actc, x, 0.0)
+            y_sum = y_sum + jnp.where(actc, y, 0.0)
+            n_avg = n_avg + act
+            return x, y, x_sum, y_sum, n_avg
+
+        x, y, x_sum, y_sum, n_avg = lax.fori_loop(
+            0, iter_block, inner,
+            (s["x"], s["y"], s["x_sum"], s["y_sum"], s["n_avg"]))
+        cycle = s["cycle"] + jnp.where(act, iter_block, 0)
+
+        # Candidate = better-scored of {current iterate, cycle average}.
+        pres_c, dres_c, compl_c, kkt_c = kkt_of(x, y)
+        n = jnp.maximum(n_avg, 1.0)
+        x_avg = x_sum / n[:, None]
+        y_avg = y_sum / n[:, None]
+        pres_a, dres_a, compl_a, kkt_a = kkt_of(x_avg, y_avg)
+        use_avg = kkt_a < kkt_c
+        uac = use_avg[:, None]
+        x_cand = jnp.where(uac, x_avg, x)
+        y_cand = jnp.where(uac, y_avg, y)
+        kkt_cand = jnp.where(use_avg, kkt_a, kkt_c)
+        pres_cand = jnp.where(use_avg, pres_a, pres_c)
+        dres_cand = jnp.where(use_avg, dres_a, dres_c)
+        compl_cand = jnp.where(use_avg, compl_a, compl_c)
+
+        better = act & (kkt_cand < s["best_kkt"])
+        best_x = jnp.where(better[:, None], x_cand, s["best_x"])
+        best_y = jnp.where(better[:, None], y_cand, s["best_y"])
+        best_kkt = jnp.where(better, kkt_cand, s["best_kkt"])
+        best_pres = jnp.where(better, pres_cand, s["best_pres"])
+        best_dres = jnp.where(better, dres_cand, s["best_dres"])
+        best_compl = jnp.where(better, compl_cand, s["best_compl"])
+
+        newly = act & (kkt_cand <= tol)
+        iters_done = jnp.where(act, s["it"] + iter_block, s["iters_done"])
+        active = act & ~newly
+
+        # A blown-up cycle recovers from the best pair seen; otherwise
+        # restart on sufficient decay or on the artificial period.
+        recover = active & (kkt_cand > jnp.maximum(
+            DIVERGE_FACTOR * best_kkt, DIVERGE_KKT_FLOOR))
+        decay = kkt_cand <= RESTART_BETA * s["kkt_rs"]
+        if restart_period:
+            decay = decay | (cycle >= restart_period)
+        do_rs = active & (decay | recover)
+        rsc = do_rs[:, None]
+
+        # cuPDLP's smoothed primal-weight update from the observed
+        # movement over the finished restart cycle, bounded to one
+        # OMEGA_STEP_CLAMP factor per restart; a recovery instead pulls
+        # omega back toward its initial value.
+        dx = jnp.linalg.norm(x_cand - s["x_rs"], axis=-1)
+        dy = jnp.linalg.norm(y_cand - s["y_rs"], axis=-1)
+        ok = (dx > EPS_GUARD) & (dy > EPS_GUARD)
+        omega_prop = jnp.exp(
+            0.5 * jnp.log(jnp.maximum(dy, EPS_GUARD)
+                          / jnp.maximum(dx, EPS_GUARD))
+            + 0.5 * jnp.log(s["omega"]))
+        omega_prop = jnp.clip(omega_prop,
+                              s["omega"] / OMEGA_STEP_CLAMP,
+                              s["omega"] * OMEGA_STEP_CLAMP)
+        omega_rs = jnp.where(ok, omega_prop, s["omega"])
+        omega_rec = jnp.sqrt(s["omega"] * omega0)
+        omega = jnp.where(do_rs,
+                          jnp.where(recover, omega_rec, omega_rs),
+                          s["omega"])
+        omega = jnp.clip(omega, OMEGA_MIN, OMEGA_MAX)
+
+        rec_c = recover[:, None]
+        x_t = jnp.where(rec_c, best_x, x_cand)
+        y_t = jnp.where(rec_c, best_y, y_cand)
+        kkt_t = jnp.where(recover, best_kkt, kkt_cand)
+        x = jnp.where(rsc, x_t, x)
+        y = jnp.where(rsc, y_t, y)
+        x_rs = jnp.where(rsc, x_t, s["x_rs"])
+        y_rs = jnp.where(rsc, y_t, s["y_rs"])
+        kkt_rs = jnp.where(do_rs, kkt_t, s["kkt_rs"])
+        reset = do_rs | newly
+        rc = reset[:, None]
+        x_sum = jnp.where(rc, 0.0, x_sum)
+        y_sum = jnp.where(rc, 0.0, y_sum)
+        n_avg = jnp.where(reset, 0.0, n_avg)
+        cycle = jnp.where(do_rs, 0, cycle)
+
+        return dict(
+            it=s["it"] + iter_block,
+            x=x, y=y, x_sum=x_sum, y_sum=y_sum, n_avg=n_avg,
+            x_rs=x_rs, y_rs=y_rs, kkt_rs=kkt_rs, cycle=cycle,
+            omega=omega, active=active,
+            best_x=best_x, best_y=best_y, best_kkt=best_kkt,
+            best_pres=best_pres, best_dres=best_dres,
+            best_compl=best_compl, iters_done=iters_done,
+            restarts=s["restarts"] + do_rs.astype(jnp.int32),
+        )
+
+    s = lax.while_loop(cond, body, state)
+
+    feas_eps = max(FEAS_EPS_REL, tol)
+    x_it = s["best_x"]
+    y_it = s["best_y"]
+
+    # -- crossover polish (2-D basis identification) ------------------
+    # Intersect the two highest-dual rows with each other and with the
+    # four box faces (15 candidate vertices); the best feasible one
+    # replaces the iterate when it improves it.  On narrow-wedge LPs
+    # the iterate converges at the Hoffman rate (slow) but the top
+    # duals already name the active faces, so this lands the vertex.
+    if m >= 2:
+        _, top = lax.top_k(y_it, 2)                      # (B, 2)
+    else:
+        top = jnp.zeros((B, 2), jnp.int32)
+    axt = jnp.take_along_axis(ax, top, axis=1)           # (B, 2)
+    ayt = jnp.take_along_axis(ay, top, axis=1)
+    bt = jnp.take_along_axis(bb, top, axis=1)
+    one = jnp.ones((B,), dt)
+    zero = jnp.zeros((B,), dt)
+    Msf = Ms[:, 0]
+    nx = jnp.stack([axt[:, 0], axt[:, 1], one, -one, zero, zero], 1)
+    ny = jnp.stack([ayt[:, 0], ayt[:, 1], zero, zero, one, -one], 1)
+    rr = jnp.stack([bt[:, 0], bt[:, 1], Msf, Msf, Msf, Msf], 1)
+    pair_i = jnp.array([i for i in range(6) for _ in range(i + 1, 6)])
+    pair_j = jnp.array([j for i in range(6) for j in range(i + 1, 6)])
+    n1x, n1y, r1 = nx[:, pair_i], ny[:, pair_i], rr[:, pair_i]
+    n2x, n2y, r2 = nx[:, pair_j], ny[:, pair_j], rr[:, pair_j]
+    det = n1x * n2y - n1y * n2x                          # (B, 15)
+    det_guard = 100.0 * jnp.finfo(dt).eps * jnp.maximum(
+        jnp.sqrt((n1x ** 2 + n1y ** 2) * (n2x ** 2 + n2y ** 2)),
+        EPS_GUARD)
+    good = jnp.abs(det) > det_guard
+    det_safe = jnp.where(good, det, 1.0)
+    vx = (r1 * n2y - r2 * n1y) / det_safe                # (B, 15)
+    vy = (n1x * r2 - n2x * r1) / det_safe
+    viols = []
+    for k in range(vx.shape[1]):
+        rowv = jnp.max(jnp.maximum(
+            ax * vx[:, k:k + 1] + ay * vy[:, k:k + 1] - bb, 0.0), axis=1)
+        boxv = jnp.maximum(jnp.maximum(jnp.abs(vx[:, k]),
+                                       jnp.abs(vy[:, k])) - Msf, 0.0)
+        viols.append(jnp.maximum(rowv, boxv))
+    pres_v = jnp.stack(viols, 1) / b_scale[:, None]      # (B, 15)
+    valid = good & (pres_v <= feas_eps)
+    obj_v = c[:, 0:1] * vx + c[:, 1:2] * vy
+    obj_masked = jnp.where(valid, obj_v, -big)
+    kbest = jnp.argmax(obj_masked, axis=1)
+    obj_pol = jnp.take_along_axis(obj_masked, kbest[:, None], 1)[:, 0]
+    x_pol = jnp.stack(
+        [jnp.take_along_axis(vx, kbest[:, None], 1)[:, 0],
+         jnp.take_along_axis(vy, kbest[:, None], 1)[:, 0]], axis=-1)
+    feas_it = s["best_pres"] <= feas_eps
+    obj_it = jnp.einsum("bd,bd->b", c, x_it)
+    # accept only a *meaningful* improvement so a converged iterate is
+    # not churned by one-ulp vertex differences
+    margin = 8.0 * jnp.finfo(dt).eps * (1.0 + jnp.abs(obj_it))
+    improve = jnp.any(valid, axis=1) & (
+        ~feas_it | (obj_pol > obj_it + margin))
+    x_fin = jnp.where(improve[:, None], x_pol, x_it)
+
+    pres_f, dres_f, compl_f, kkt_f = kkt_of(x_fin, y_it)
+    x_out = x_fin * s_scale[:, None]                     # unscale
+    sol = LPSolution(
+        x=x_out,
+        feasible=pres_f <= feas_eps,
+        objective=jnp.einsum("bd,bd->b", c, x_out),
+    )
+    stats = PDHGStats(
+        iterations=s["iters_done"], restarts=s["restarts"],
+        primal_res=pres_f, dual_res=dres_f,
+        compl=compl_f, kkt=kkt_f,
+        converged=(kkt_f <= tol) | (s["best_kkt"] <= tol))
+    return sol, stats
+
+
+# -- public entry points ---------------------------------------------------
+
+def solve_pdhg(batch: LPBatch, *, M: float = DEFAULT_M,
+               tol: Optional[float] = None,
+               max_iters: Optional[int] = None,
+               iter_block: Optional[int] = None,
+               restart_period: Optional[int] = None) -> LPSolution:
+    """Solve an AoS :class:`LPBatch` with restarted PDHG."""
+    sol, _ = _solve_rows(batch.A[..., 0], batch.A[..., 1], batch.b,
+                         batch.c, batch.m_valid, M=M, tol=tol,
+                         max_iters=max_iters, iter_block=iter_block,
+                         restart_period=restart_period)
+    return sol
+
+
+def solve_pdhg_packed(pb: PackedLPBatch, *, M: float = DEFAULT_M,
+                      tol: Optional[float] = None,
+                      max_iters: Optional[int] = None,
+                      iter_block: Optional[int] = None,
+                      restart_period: Optional[int] = None) -> LPSolution:
+    """The packed fast path: consume ``PackedLPBatch.L`` rows directly
+    (no AoS round-trip inside the trace)."""
+    sol, _ = _solve_rows(pb.ax, pb.ay, pb.b, pb.c,
+                         pb.m_valid.reshape(-1), M=M, tol=tol,
+                         max_iters=max_iters, iter_block=iter_block,
+                         restart_period=restart_period)
+    return sol
+
+
+def solve_pdhg_with_stats(batch, *, M: float = DEFAULT_M,
+                          tol: Optional[float] = None,
+                          max_iters: Optional[int] = None,
+                          iter_block: Optional[int] = None,
+                          restart_period: Optional[int] = None
+                          ) -> Tuple[LPSolution, PDHGStats]:
+    """Like :func:`solve_pdhg` / :func:`solve_pdhg_packed` (either
+    layout) but also returns the per-problem :class:`PDHGStats`
+    certificate — what the tests and the crossover benchmark assert
+    convergence on."""
+    if isinstance(batch, PackedLPBatch):
+        return _solve_rows(batch.ax, batch.ay, batch.b, batch.c,
+                           batch.m_valid.reshape(-1), M=M, tol=tol,
+                           max_iters=max_iters, iter_block=iter_block,
+                           restart_period=restart_period)
+    return _solve_rows(batch.A[..., 0], batch.A[..., 1], batch.b,
+                       batch.c, batch.m_valid, M=M, tol=tol,
+                       max_iters=max_iters, iter_block=iter_block,
+                       restart_period=restart_period)

@@ -187,7 +187,7 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
         print(sched.metrics.format_report(sched.cache.stats()))
         if cfg.check:
             print(f"[serve_lp.bench] check ok: {cfg.check} requests "
-                  "match direct solve_batch_lp")
+                  "match a direct solver-spec solve")
     if cfg.assert_overlap:
         assert cfg.pipeline, "--assert-overlap needs pipelining enabled"
         assert snap["inflight_max"] >= 2, (

@@ -13,13 +13,20 @@ One operation, many LPs, every backend::
 
     # same problem, every backend, bit-for-bit comparable:
     sweep = [SolverSpec(backend=b, interpret=True if b == "kernel"
-                        else None) for b in ("naive", "rgb", "kernel")]
+                        else None)
+             for b in ("naive", "rgb", "kernel", "pdhg")]
     sols = [s.build().solve(batch) for s in sweep]
 
 :class:`SolverSpec` is frozen and hashable — use it directly as a
 static ``jax.jit`` argument or as an executable-cache key (the serving
-layer's ``ExecSpec`` embeds one).  ``core.solve_batch_lp`` remains as a
-deprecated shim over this module.
+layer's ``ExecSpec`` embeds one).
+
+The exact Seidel backends (``naive``/``rgb``/``kernel``) answer to
+machine precision at 2-D/small-m; ``backend="pdhg"`` is the restarted
+first-order backend (:mod:`repro.pdhg`) that scales m into the
+thousands and answers to a KKT tolerance.  ``backend="auto"`` routes
+each input shape to the fastest *measured* backend when the tuning
+table has entries.
 
 Launch geometry left unset (``tile``/``chunk`` ``None``) is pinned per
 input shape with the precedence *explicit > measured tuning table >

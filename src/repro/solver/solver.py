@@ -10,10 +10,10 @@ backend and returns a Solver that
 * offers ``solve_one(A, b, c)`` for the single-LP convenience case.
 
 ``solve_with_spec`` is the underlying pure function (spec in Python,
-arrays traced).  Every layer — the ``core.solve_batch_lp`` deprecation
-shim, ``kernels.ops``, the serving executables in
-``serve_lp.sharding`` — runs through it, which is what makes "same
-problem, every backend, bit-for-bit comparable" a one-liner.
+arrays traced).  Every layer — the benchmarks, the tuner, the serving
+executables in ``serve_lp.sharding`` — runs through it, which is what
+makes "same problem, every backend, bit-for-bit comparable" a
+one-liner.
 
 Both entry points accept either constraint layout: the AoS
 :class:`~repro.core.lp.LPBatch` or the packed SoA
@@ -49,6 +49,7 @@ from repro.core.packed import (PackedLPBatch, normalize_packed, pack,
                                shuffle_packed)
 from repro.core.seidel import (solve_naive, solve_naive_packed, solve_rgb,
                                solve_rgb_packed)
+from repro.pdhg import solve_pdhg, solve_pdhg_packed
 from repro.solver.spec import RGB_DEFAULT_TILE, SolverSpec
 
 AnyLPBatch = Union[LPBatch, PackedLPBatch]
@@ -97,6 +98,11 @@ def _solve_packed(spec: SolverSpec, pb: PackedLPBatch, dt,
         pb = shuffle_packed(key, pb)
     if spec.backend == "kernel":
         return _solve_kernel(spec, pb)
+    if spec.backend == "pdhg":
+        return solve_pdhg_packed(pb, M=spec.M, tol=spec.tol,
+                                 max_iters=spec.max_iters,
+                                 iter_block=spec.iter_block,
+                                 restart_period=spec.restart_period)
     if spec.backend == "naive":
         return solve_naive_packed(pb, M=spec.M)
     return solve_rgb_packed(pb, M=spec.M,
@@ -105,6 +111,11 @@ def _solve_packed(spec: SolverSpec, pb: PackedLPBatch, dt,
 
 
 def _solve_dense(spec: SolverSpec, batch: LPBatch) -> LPSolution:
+    if spec.backend == "pdhg":
+        return solve_pdhg(batch, M=spec.M, tol=spec.tol,
+                          max_iters=spec.max_iters,
+                          iter_block=spec.iter_block,
+                          restart_period=spec.restart_period)
     if spec.backend == "naive":
         return solve_naive(batch, M=spec.M)
     return solve_rgb(batch, M=spec.M,

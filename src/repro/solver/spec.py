@@ -1,10 +1,10 @@
 """`SolverSpec` — the one frozen, hashable description of *how* to solve.
 
 Every public entry point used to carry its own loose bag of kwargs
-(``core.solve_batch_lp(method=..., tile=..., ...)``,
-``kernels.ops.solve_batch_lp_kernel`` with a different signature and a
-different ``normalize`` default, the serving scheduler re-threading
-tile/M/interpret by hand).  A :class:`SolverSpec` replaces all of them:
+(the historical ``method=``/``tile=`` call styles, since-retired
+compat wrappers with conflicting ``normalize`` defaults, the serving
+scheduler re-threading tile/M/interpret by hand).  A
+:class:`SolverSpec` replaces all of them:
 it validates once at construction, hashes and compares by value — so it
 can key executable caches and be passed as a static ``jax.jit``
 argument — and builds a reusable :class:`~repro.solver.solver.Solver`
@@ -40,8 +40,13 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
 # Box bound default: "very large so as not to affect the optimum".
 DEFAULT_M = 1.0e4
 
-BACKENDS = ("naive", "rgb", "kernel", "auto")
+BACKENDS = ("naive", "rgb", "kernel", "pdhg", "auto")
 DTYPES = ("float32", "float64")
+
+# Spec knobs that only the first-order backend interprets; validation
+# rejects them on any other backend so a typo'd spec fails loudly
+# instead of silently ignoring a tolerance.
+PDHG_ONLY_FIELDS = ("iter_block", "restart_period", "tol", "max_iters")
 
 # Backend-default tiles when ``tile=None`` and the tuning table has no
 # entry: the pure-JAX cooperative solver uses the paper-faithful
@@ -64,9 +69,13 @@ class SolverSpec:
     ----------
     backend:
         ``"naive"`` (divergence-emulating vmap baseline), ``"rgb"``
-        (pure-JAX cooperative tiles), ``"kernel"`` (Pallas TPU kernel)
-        or ``"auto"`` (kernel on TPU, rgb elsewhere — resolved against
-        the running JAX backend by :meth:`resolve`/:meth:`build`).
+        (pure-JAX cooperative tiles), ``"kernel"`` (Pallas TPU kernel),
+        ``"pdhg"`` (restarted first-order solver, :mod:`repro.pdhg` —
+        matrix-free, scales past small m, answers to a tolerance) or
+        ``"auto"`` (the fastest *measured* backend for the input shape
+        when the tuning table has entries, else kernel on TPU / rgb
+        elsewhere — resolved by :meth:`resolve`/:meth:`build` and
+        :meth:`resolve_for_shape`).
     tile:
         problems per cooperative tile.  ``None`` means "pick per
         shape": the measured tuning table when it has an entry,
@@ -93,6 +102,20 @@ class SolverSpec:
     dtype:
         solve precision, ``"float32"`` or ``"float64"`` (inputs are
         cast on entry).
+    iter_block:
+        ``pdhg`` only — iterations fused per ``lax.while_loop`` block
+        (residuals/restarts are checked at block boundaries).  ``None``
+        means "pick per shape": tuning table, then the pdhg default.
+    restart_period:
+        ``pdhg`` only — artificial restart period in iterations (``0``
+        disables the periodic trigger, adaptive restarts still fire).
+        ``None`` resolves like ``iter_block``.
+    tol:
+        ``pdhg`` only — relative KKT tolerance; ``None`` picks the
+        dtype default (1e-4 float32, 1e-8 float64).
+    max_iters:
+        ``pdhg`` only — iteration budget; ``None`` picks the dtype
+        default (20k float32, 100k float64).
     """
 
     backend: str = "auto"
@@ -104,6 +127,10 @@ class SolverSpec:
     seed: int = 0
     interpret: Optional[bool] = None
     dtype: str = "float32"
+    iter_block: Optional[int] = None
+    restart_period: Optional[int] = None
+    tol: Optional[float] = None
+    max_iters: Optional[int] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -129,6 +156,35 @@ class SolverSpec:
             raise ValueError(f"dtype={self.dtype!r}; expected one of "
                              f"{DTYPES}")
         object.__setattr__(self, "dtype", dt)
+        if self.iter_block is not None and (
+                not isinstance(self.iter_block, int)
+                or self.iter_block < 1):
+            raise ValueError(f"iter_block={self.iter_block!r} must be a "
+                             "positive int or None")
+        if self.restart_period is not None and (
+                not isinstance(self.restart_period, int)
+                or self.restart_period < 0):
+            raise ValueError(f"restart_period={self.restart_period!r} "
+                             "must be an int >= 0 or None (0 disables "
+                             "the periodic trigger)")
+        if self.tol is not None:
+            tol = float(self.tol)
+            if not tol > 0.0:
+                raise ValueError(f"tol={self.tol!r} must be > 0 or None")
+            object.__setattr__(self, "tol", tol)
+        if self.max_iters is not None and (
+                not isinstance(self.max_iters, int)
+                or self.max_iters < 1):
+            raise ValueError(f"max_iters={self.max_iters!r} must be a "
+                             "positive int or None")
+        if self.backend != "pdhg":
+            stray = [f for f in PDHG_ONLY_FIELDS
+                     if getattr(self, f) is not None]
+            if stray:
+                raise ValueError(
+                    f"{', '.join(stray)} are pdhg-only knobs; "
+                    f"backend={self.backend!r} does not interpret them "
+                    "(build a SolverSpec(backend='pdhg', ...) instead)")
 
     # -- resolution ------------------------------------------------------
 
@@ -173,7 +229,11 @@ class SolverSpec:
 
     @property
     def is_shape_resolved(self) -> bool:
-        """True once launch geometry is concrete as well."""
+        """True once launch geometry is concrete as well (for ``pdhg``
+        that includes the block/restart schedule)."""
+        if self.backend == "pdhg" and (self.iter_block is None
+                                       or self.restart_period is None):
+            return False
         return (self.is_resolved and self.tile is not None
                 and self.chunk is not None)
 
@@ -211,6 +271,8 @@ class SolverSpec:
         spec = spec.resolve(platform)
         if spec.is_shape_resolved:
             return spec
+        if spec.backend == "pdhg":
+            return spec._resolve_pdhg_shape(table, m, batch)
         tile, chunk = spec.tile, spec.chunk
         entry = None
         if table is not None and (tile is None or chunk is None):
@@ -246,6 +308,41 @@ class SolverSpec:
             return spec
         return dataclasses.replace(spec, tile=tile, chunk=chunk)
 
+    def _resolve_pdhg_shape(self, table, m: int,
+                            batch: Optional[int]) -> "SolverSpec":
+        """Pin the pdhg schedule (same precedence as tile/chunk).  A
+        pdhg table entry's two geometry slots carry ``(iter_block,
+        restart_period)`` — see :mod:`repro.tune.table`.  ``tile`` and
+        ``chunk`` are inert for pdhg but still pinned to concrete
+        values so shape-resolved consumers (the serving layer's
+        ``ExecSpec`` batch ladder) keep working unchanged."""
+        from repro.pdhg import (DEFAULT_ITER_BLOCK,
+                                DEFAULT_RESTART_PERIOD)  # deferred
+        ib, rp = self.iter_block, self.restart_period
+        if table is not None and (ib is None or rp is None):
+            try:
+                entry = table.lookup(backend="pdhg", dtype=self.dtype,
+                                     m=m, batch=batch)
+            except Exception:
+                entry = None
+            if entry is not None:
+                if ib is None:
+                    ib = entry.tile
+                if rp is None:
+                    rp = entry.chunk
+        if ib is None:
+            ib = DEFAULT_ITER_BLOCK
+        if rp is None:
+            rp = DEFAULT_RESTART_PERIOD
+        tile = self.tile if self.tile is not None else RGB_DEFAULT_TILE
+        chunk = self.chunk if self.chunk is not None else 0
+        if (ib == self.iter_block and rp == self.restart_period
+                and tile == self.tile and chunk == self.chunk):
+            return self
+        return dataclasses.replace(self, iter_block=ib,
+                                   restart_period=rp, tile=tile,
+                                   chunk=chunk)
+
     # -- construction of the runtime object ------------------------------
 
     def build(self) -> "Solver":
@@ -266,8 +363,7 @@ def get_solver(spec: SolverSpec) -> "Solver":
     """Process-wide ``spec -> Solver`` cache.
 
     Equal specs share one Solver — and therefore one per-shape compile
-    cache — which is what makes the ``core.solve_batch_lp`` shim free
-    of repeated jit setup and keeps sweeps like
+    cache — which keeps sweeps like
     ``[get_solver(s).solve(batch) for s in sweep]`` cheap to re-run.
     """
     return _cached_solver(spec.resolve())

@@ -87,7 +87,11 @@ def representative_batch(m_pad: int, batch: int, *,
 def candidate_spec(cand: Candidate, *, dtype: str = "float32",
                    interpret: Optional[bool] = None) -> SolverSpec:
     """The fully-explicit spec for one candidate (tile and chunk pinned,
-    so resolution never re-enters the tuning table)."""
+    so resolution never re-enters the tuning table).  A pdhg
+    candidate's slots map back to its iteration schedule."""
+    if cand.backend == "pdhg":
+        return SolverSpec(backend="pdhg", iter_block=cand.tile,
+                          restart_period=cand.chunk, dtype=dtype)
     return SolverSpec(backend=cand.backend, tile=cand.tile,
                       chunk=cand.chunk, dtype=dtype, interpret=interpret)
 

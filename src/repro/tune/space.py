@@ -17,6 +17,12 @@ device kind)`` — the constraints mirror the execution layers:
   ``_pick_tile`` uses (a candidate that cannot fit VMEM is not worth
   timing); chunks must divide the LANE-rounded ``m_pad`` exactly
   (``rgb_pallas`` rejects anything else).
+* ``pdhg`` has no launch geometry — its knobs are the iteration
+  schedule.  A pdhg candidate reinterprets the ``(tile, chunk)`` slots
+  as ``(iter_block, restart_period)`` (the same reinterpretation
+  :class:`~repro.tune.table.TableEntry` records and
+  ``SolverSpec.resolve_for_shape`` reads back), so the tuner, table
+  and resolution stay schema-compatible across backends.
 
 Everything returned here is safe to *run*; which candidate is fastest
 is the runner's job to measure, never this module's to guess.
@@ -34,30 +40,39 @@ RGB_TILES = (8, 16, 32, 64, 128, 256)
 RGB_CHUNKS = (0, 64, 128)
 KERNEL_TILES = (8, 16, 32, 64, 128)
 KERNEL_CHUNKS = (0, 128, 256)
+# pdhg iteration schedule, riding in the (tile, chunk) slots.
+PDHG_ITER_BLOCKS = (32, 64, 128)
+PDHG_RESTART_PERIODS = (0, 512, 2048)
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # matches _pick_tile's budget
 
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One tunable configuration (tile/chunk are concrete, never None)."""
+    """One tunable configuration (tile/chunk are concrete, never None).
+
+    For ``backend="pdhg"`` the slots carry ``(iter_block,
+    restart_period)`` instead of launch geometry."""
 
     backend: str
     tile: int
     chunk: int
 
     def label(self) -> str:
+        if self.backend == "pdhg":
+            return f"pdhg/ib{self.tile}/rp{self.chunk}"
         return f"{self.backend}/t{self.tile}/c{self.chunk}"
 
 
 def default_backends(device_kind: Optional[str] = None) -> tuple:
     """Backends worth timing on a device family: the Pallas kernel only
     runs compiled on TPU (interpret mode measures the emulator, not the
-    hardware), the dense pair runs everywhere."""
+    hardware), the dense pair runs everywhere, and pdhg is the
+    large-m first-order contender on every platform."""
     kind = device_kind if device_kind is not None else current_device_kind()
     if device_platform(kind) == "tpu":
-        return ("rgb", "kernel")
-    return ("naive", "rgb")
+        return ("rgb", "kernel", "pdhg")
+    return ("naive", "rgb", "pdhg")
 
 
 def candidate_space(
@@ -104,6 +119,12 @@ def candidate_space(
                     if chunk and (chunk >= m_lane or m_lane % chunk):
                         continue
                     out.append(Candidate("kernel", tile, chunk))
+        elif backend == "pdhg":
+            for iter_block in PDHG_ITER_BLOCKS:
+                for period in PDHG_RESTART_PERIODS:
+                    if period and period < iter_block:
+                        continue  # a period under one block never fires
+                    out.append(Candidate("pdhg", iter_block, period))
         else:
             raise ValueError(f"unknown backend {backend!r}")
     return out

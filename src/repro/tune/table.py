@@ -88,7 +88,7 @@ class TableKey:
     """Everything a timing record is conditioned on."""
 
     device_kind: str   # normalized (see normalize_device_kind)
-    backend: str       # "naive" | "rgb" | "kernel"
+    backend: str       # "naive" | "rgb" | "kernel" | "pdhg"
     dtype: str         # "float32" | "float64"
     m_bucket: int      # bucket_pow2(m_pad, M_BUCKET_BASE)
     batch_bucket: int  # bucket_pow2(batch, BATCH_BUCKET_BASE); 0 = any
@@ -100,7 +100,13 @@ class TableKey:
 
 @dataclasses.dataclass(frozen=True)
 class TableEntry:
-    """One measured (or seeded) winning configuration."""
+    """One measured (or seeded) winning configuration.
+
+    For ``backend="pdhg"`` rows the ``(tile, chunk)`` slots carry the
+    iteration schedule ``(iter_block, restart_period)`` — same shape,
+    same validation (``iter_block >= 1``, ``restart_period >= 0``), no
+    schema bump; ``SolverSpec.resolve_for_shape`` reads them back into
+    the pdhg knobs."""
 
     key: TableKey
     tile: int
@@ -193,7 +199,7 @@ class TuningTable:
                             batch: Optional[int] = None,
                             device_kind: Optional[str] = None,
                             backends: Iterable[str] = ("naive", "rgb",
-                                                       "kernel"),
+                                                       "kernel", "pdhg"),
                             ) -> Optional[TableEntry]:
         """Fastest recorded entry across backends for a shape class —
         what ``backend="auto"`` resolution uses when measurements

@@ -220,13 +220,15 @@ def test_lp_solver_sharded_over_mesh(multidevice):
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
         import warnings; warnings.filterwarnings("ignore")
-        from repro.core import random_feasible_lp, solve_batch_lp, \\
+        from repro.core import random_feasible_lp, \\
             normalize_batch, shuffle_batch
+        from repro.solver import SolverSpec, get_solver
         from repro.launch.mesh import make_host_mesh
         from repro.launch import steps
         lp = shuffle_batch(jax.random.key(5), normalize_batch(
             random_feasible_lp(jax.random.key(0), 64, 24)))
-        ref = solve_batch_lp(lp, method="rgb", normalize=False)
+        ref = get_solver(SolverSpec(backend="rgb", tile=32, chunk=0,
+                                    normalize=False)).solve(lp)
         mesh = make_host_mesh(2, 2)
         prog = steps.make_lp_step(mesh, batch=64, m=24)
         out = prog.jit()({"A": lp.A, "b": lp.b, "c": lp.c,

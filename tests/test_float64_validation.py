@@ -70,19 +70,97 @@ print("float64-validation-ok", len(batches) * len(specs))
 """
 
 
-def test_float64_matches_scipy():
+_PDHG_SNIPPET = r"""
+import jax
+assert jax.config.jax_enable_x64, "SKIP:x64-unavailable"
+try:
+    from scipy.optimize import linprog
+except Exception:
+    raise SystemExit("SKIP:no-scipy")
+import numpy as np
+from repro.core import (adversarial_lp, infeasible_lp,
+                        ragged_feasible_lp, random_feasible_lp)
+from repro.core.packed import pack
+from repro.pdhg import solve_pdhg_with_stats
+from repro.solver import SolverSpec, get_solver
+
+M = 1.0e4
+f64 = jax.numpy.float64
+
+def scipy_ref(lp):
+    A = np.asarray(lp.A); b = np.asarray(lp.b); c = np.asarray(lp.c)
+    mv = np.asarray(lp.m_valid)
+    feas, obj = [], []
+    for i in range(A.shape[0]):
+        m = int(mv[i])
+        res = linprog(-c[i], A_ub=A[i, :m], b_ub=b[i, :m],
+                      bounds=[(-M, M), (-M, M)], method="highs")
+        feas.append(res.status == 0)
+        obj.append(-res.fun if res.status == 0 else np.nan)
+    return feas, obj
+
+batches = {
+    "adversarial": adversarial_lp(4, 24, dtype=f64),
+    "ragged": ragged_feasible_lp(jax.random.key(5), 6, 18, m_min=3,
+                                 dtype=f64),
+    "infeasible": infeasible_lp(3, 8, dtype=f64),
+    "big-m": random_feasible_lp(jax.random.key(11), 4, 2048, dtype=f64),
+}
+spec = SolverSpec(backend="pdhg", dtype="float64")
+for bname, lp in batches.items():
+    ref_feas, ref_obj = scipy_ref(lp)
+    sol = get_solver(spec).solve(lp)
+    assert sol.x.dtype == f64, bname
+    feas = np.asarray(sol.feasible); obj = np.asarray(sol.objective)
+    assert list(feas) == ref_feas, (
+        f"{bname}: feasibility {list(feas)} != scipy {ref_feas}")
+    for i, ok in enumerate(ref_feas):
+        if ok:
+            assert abs(obj[i] - ref_obj[i]) <= 1e-6 * (
+                1.0 + abs(ref_obj[i])), (
+                f"{bname}[{i}]: objective {obj[i]} != scipy "
+                f"{ref_obj[i]}")
+
+# The past-small-m acceptance block: at m=2048 the certificate itself
+# must land under 1e-6, not just the objective.
+_, st = solve_pdhg_with_stats(pack(batches["big-m"]))
+conv = np.asarray(st.converged); pres = np.asarray(st.primal_res)
+kkt = np.asarray(st.kkt)
+assert conv.all(), f"big-m: {int((~conv).sum())}/4 unconverged {kkt}"
+assert (pres <= 1e-6).all(), f"big-m: primal residual {pres}"
+assert (kkt <= 1e-6).all(), f"big-m: kkt residual {kkt}"
+print("float64-pdhg-ok", len(batches))
+"""
+
+
+def _run_x64_snippet(snippet):
     env = dict(os.environ)
     env["JAX_ENABLE_X64"] = "1"
     env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
     env["PYTHONPATH"] = str(SRC)
-    r = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
+    r = subprocess.run([sys.executable, "-c", snippet], env=env,
                        capture_output=True, text=True, timeout=600)
     tail = (r.stdout + r.stderr)
     if "SKIP:no-scipy" in tail:
         pytest.skip("scipy unavailable in this environment")
     if "SKIP:x64-unavailable" in tail:
         pytest.skip("jax build cannot enable x64")
+    return r
+
+
+def test_float64_matches_scipy():
+    r = _run_x64_snippet(_SNIPPET)
     assert r.returncode == 0, (
         f"float64 validation failed:\nSTDOUT:\n{r.stdout}\n"
         f"STDERR:\n{r.stderr}")
     assert "float64-validation-ok" in r.stdout
+
+
+def test_float64_pdhg_matches_scipy():
+    """pdhg f64 vs scipy on the same batch kinds, plus the m=2048
+    acceptance block asserting residuals <= 1e-6."""
+    r = _run_x64_snippet(_PDHG_SNIPPET)
+    assert r.returncode == 0, (
+        f"float64 pdhg validation failed:\nSTDOUT:\n{r.stdout}\n"
+        f"STDERR:\n{r.stderr}")
+    assert "float64-pdhg-ok" in r.stdout

@@ -7,9 +7,24 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (infeasible_lp, normalize_batch, ragged_feasible_lp,
-                        random_feasible_lp, shuffle_batch, solve_batch_lp)
+                        random_feasible_lp, shuffle_batch)
 from repro.kernels import ops, ref
 from repro.kernels.batch_lp import _pick_tile
+from repro.solver import SolverSpec, get_solver
+
+
+def solve_rgb(lp):
+    """Reference rgb solve at the historical defaults (tile 32, dense
+    re-solve); normalisation already applied by the caller."""
+    return get_solver(SolverSpec(backend="rgb", tile=32, chunk=0,
+                                 normalize=False)).solve(lp)
+
+
+def solve_kernel(lp, tile=None):
+    """Interpret-mode kernel solve (tile auto unless pinned)."""
+    return get_solver(SolverSpec(backend="kernel", tile=tile,
+                                 normalize=False,
+                                 interpret=True)).solve(lp)
 
 
 @pytest.mark.parametrize("batch,m", [
@@ -18,8 +33,8 @@ from repro.kernels.batch_lp import _pick_tile
 def test_kernel_matches_ref(batch, m):
     lp = random_feasible_lp(jax.random.key(batch + m), batch, m)
     nb = shuffle_batch(jax.random.key(1), normalize_batch(lp))
-    r = solve_batch_lp(nb, method="rgb", normalize=False)
-    k = solve_batch_lp(nb, method="kernel", normalize=False, interpret=True)
+    r = solve_rgb(nb)
+    k = solve_kernel(nb)
     np.testing.assert_array_equal(np.asarray(r.feasible),
                                   np.asarray(k.feasible))
     np.testing.assert_allclose(np.asarray(r.x), np.asarray(k.x),
@@ -30,7 +45,7 @@ def test_kernel_packed_interface_matches_ref():
     lp = normalize_batch(random_feasible_lp(jax.random.key(0), 32, 50))
     L, c, mv = ops.pack_constraints(lp)
     x_ref, feas_ref = ref.solve_packed_ref(L, c, mv)
-    sol = ops.solve_batch_lp_kernel(lp, interpret=True)
+    sol = solve_kernel(lp)
     np.testing.assert_allclose(np.asarray(sol.x), np.asarray(x_ref),
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_array_equal(
@@ -39,16 +54,15 @@ def test_kernel_packed_interface_matches_ref():
 
 def test_kernel_infeasible():
     lp = normalize_batch(infeasible_lp(16, 20))
-    sol = solve_batch_lp(lp, method="kernel", normalize=False,
-                         interpret=True)
+    sol = solve_kernel(lp)
     assert not bool(jnp.any(sol.feasible))
 
 
 def test_kernel_ragged():
     lp = shuffle_batch(jax.random.key(7), normalize_batch(
         ragged_feasible_lp(jax.random.key(6), 40, 70)))
-    r = solve_batch_lp(lp, method="rgb", normalize=False)
-    k = solve_batch_lp(lp, method="kernel", normalize=False, interpret=True)
+    r = solve_rgb(lp)
+    k = solve_kernel(lp)
     np.testing.assert_allclose(np.asarray(r.x), np.asarray(k.x),
                                rtol=1e-4, atol=1e-4)
 
@@ -56,8 +70,8 @@ def test_kernel_ragged():
 @pytest.mark.parametrize("tile", [8, 32, 128])
 def test_kernel_tile_sizes(tile):
     lp = normalize_batch(random_feasible_lp(jax.random.key(2), 48, 30))
-    base = ops.solve_batch_lp_kernel(lp, interpret=True)
-    t = ops.solve_batch_lp_kernel(lp, tile=tile, interpret=True)
+    base = solve_kernel(lp)
+    t = solve_kernel(lp, tile=tile)
     np.testing.assert_allclose(np.asarray(base.x), np.asarray(t.x),
                                rtol=1e-5, atol=1e-5)
 
@@ -99,8 +113,8 @@ def test_pick_tile_pinned():
 def test_kernel_property_sweep(seed, m, batch):
     lp = shuffle_batch(jax.random.key(seed + 1), normalize_batch(
         random_feasible_lp(jax.random.key(seed), batch, m)))
-    r = solve_batch_lp(lp, method="rgb", normalize=False)
-    k = solve_batch_lp(lp, method="kernel", normalize=False, interpret=True)
+    r = solve_rgb(lp)
+    k = solve_kernel(lp)
     np.testing.assert_allclose(np.asarray(r.objective),
                                np.asarray(k.objective),
                                rtol=2e-4, atol=2e-4)

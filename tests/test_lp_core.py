@@ -9,11 +9,19 @@ from scipy.optimize import linprog
 
 from repro.core import (adversarial_lp, infeasible_lp, make_batch,
                         normalize_batch, pad_batch, ragged_feasible_lp,
-                        random_feasible_lp, replicated_lp, shuffle_batch,
-                        solve_batch_lp)
+                        random_feasible_lp, replicated_lp, shuffle_batch)
+from repro.solver import SolverSpec, get_solver
 
 M_BOX = 1.0e4
 RTOL = 3e-4
+
+
+def solve(lp, method="rgb", key=None, normalize=True):
+    """Solve via the unified front end with the historical defaults
+    these tests were written against (tile 32, dense re-solve)."""
+    spec = SolverSpec(backend=method, tile=32, chunk=0,
+                      normalize=normalize)
+    return get_solver(spec).solve(lp, key=key)
 
 
 def scipy_solve(A, b, c):
@@ -47,25 +55,25 @@ def assert_matches_scipy(batch, sol, rtol=RTOL):
 @pytest.mark.parametrize("batch,m", [(32, 8), (16, 100), (5, 3)])
 def test_random_feasible_matches_scipy(method, batch, m):
     lp = random_feasible_lp(jax.random.key(batch * m), batch, m)
-    sol = solve_batch_lp(lp, method=method, key=jax.random.key(1))
+    sol = solve(lp, method=method, key=jax.random.key(1))
     assert_matches_scipy(lp, sol)
 
 
 @pytest.mark.parametrize("method", ["naive", "rgb"])
 def test_infeasible_detection(method):
-    sol = solve_batch_lp(infeasible_lp(8, 12), method=method)
+    sol = solve(infeasible_lp(8, 12), method=method)
     assert not bool(jnp.any(sol.feasible))
 
 
 def test_ragged_batch():
     lp = ragged_feasible_lp(jax.random.key(3), 24, 60)
-    sol = solve_batch_lp(lp, method="rgb", key=jax.random.key(4))
+    sol = solve(lp, method="rgb", key=jax.random.key(4))
     assert_matches_scipy(lp, sol)
 
 
 def test_replicated_batch_identical_results():
     lp = replicated_lp(jax.random.key(5), 16, 40)
-    sol = solve_batch_lp(lp, method="rgb")
+    sol = solve(lp, method="rgb")
     x = np.asarray(sol.x)
     np.testing.assert_allclose(x, np.broadcast_to(x[:1], x.shape),
                                rtol=1e-5, atol=1e-5)
@@ -74,15 +82,15 @@ def test_replicated_batch_identical_results():
 def test_adversarial_order_still_correct():
     lp = adversarial_lp(4, 64)
     for key in (None, jax.random.key(0)):
-        sol = solve_batch_lp(lp, method="rgb", key=key)
+        sol = solve(lp, method="rgb", key=key)
         assert_matches_scipy(lp, sol)
 
 
 def test_naive_and_rgb_agree():
     lp = random_feasible_lp(jax.random.key(9), 64, 33)
     nb = shuffle_batch(jax.random.key(2), normalize_batch(lp))
-    a = solve_batch_lp(nb, method="naive", normalize=False)
-    b = solve_batch_lp(nb, method="rgb", normalize=False)
+    a = solve(nb, method="naive", normalize=False)
+    b = solve(nb, method="rgb", normalize=False)
     np.testing.assert_array_equal(np.asarray(a.feasible),
                                   np.asarray(b.feasible))
     np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x),
@@ -91,8 +99,8 @@ def test_naive_and_rgb_agree():
 
 def test_padding_neutral():
     lp = random_feasible_lp(jax.random.key(11), 8, 17)
-    sol1 = solve_batch_lp(lp, method="rgb")
-    sol2 = solve_batch_lp(pad_batch(lp, 64), method="rgb")
+    sol1 = solve(lp, method="rgb")
+    sol2 = solve(pad_batch(lp, 64), method="rgb")
     np.testing.assert_allclose(np.asarray(sol1.x), np.asarray(sol2.x),
                                rtol=1e-5, atol=1e-5)
 
@@ -109,7 +117,7 @@ def test_solution_is_feasible_and_on_boundary(batch, m, seed):
     tolerance and (b) either touches a constraint/box boundary or is the
     unconstrained box corner."""
     lp = random_feasible_lp(jax.random.key(seed), batch, m)
-    sol = solve_batch_lp(lp, method="rgb", key=jax.random.key(seed + 1))
+    sol = solve(lp, method="rgb", key=jax.random.key(seed + 1))
     A = np.asarray(lp.A, np.float64)
     b = np.asarray(lp.b, np.float64)
     x = np.asarray(sol.x, np.float64)
@@ -128,8 +136,8 @@ def test_solution_is_feasible_and_on_boundary(batch, m, seed):
 def test_shuffle_invariance(seed, m):
     """The optimum must not depend on the (random) consideration order."""
     lp = random_feasible_lp(jax.random.key(seed), 6, m)
-    s1 = solve_batch_lp(lp, method="rgb", key=jax.random.key(1))
-    s2 = solve_batch_lp(lp, method="rgb", key=jax.random.key(2))
+    s1 = solve(lp, method="rgb", key=jax.random.key(1))
+    s2 = solve(lp, method="rgb", key=jax.random.key(2))
     np.testing.assert_allclose(np.asarray(s1.objective),
                                np.asarray(s2.objective),
                                rtol=5e-4, atol=5e-4)
@@ -143,8 +151,8 @@ def test_adding_constraint_never_improves(seed):
     k1, k2 = jax.random.split(jax.random.key(seed))
     lp_big = random_feasible_lp(k1, 4, 24)
     lp_small = make_batch(lp_big.A[:, :12], lp_big.b[:, :12], lp_big.c)
-    s_small = solve_batch_lp(lp_small, method="rgb", key=k2)
-    s_big = solve_batch_lp(lp_big, method="rgb", key=k2)
+    s_small = solve(lp_small, method="rgb", key=k2)
+    s_big = solve(lp_big, method="rgb", key=k2)
     ok = ~np.asarray(s_big.feasible) | (
         np.asarray(s_big.objective)
         <= np.asarray(s_small.objective) + 1e-2)
@@ -158,8 +166,8 @@ def test_tie_breaking_deterministic():
     b = np.array([[1.0, 1.0]] * 3)
     c = np.array([[0.0, 1.0]] * 3)  # objective parallel to constraint 0
     lp = make_batch(A, b, c)
-    s1 = solve_batch_lp(lp, method="rgb")
-    s2 = solve_batch_lp(lp, method="naive")
+    s1 = solve(lp, method="rgb")
+    s2 = solve(lp, method="naive")
     np.testing.assert_allclose(np.asarray(s1.x), np.asarray(s2.x),
                                rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(np.asarray(s1.x[:, 1]), 1.0, rtol=1e-5)

@@ -10,9 +10,9 @@ import numpy as np
 import pytest
 
 from repro.core import (concat_batches, make_batch, pack_call_count,
-                        pad_batch_dim, ragged_feasible_lp, solve_batch_lp,
-                        split_batch)
+                        pad_batch_dim, ragged_feasible_lp, split_batch)
 from repro.kernels import ops
+from repro.solver import get_solver
 from repro.serve_lp import (BatchScheduler, ExecSpec, ExecutableCache,
                             ServeMetrics, SolverSpec, as_executable,
                             bucket_batch, bucket_m, build_executable,
@@ -150,8 +150,9 @@ def test_pad_batch_dim_neutral():
     p = pad_batch_dim(b, 8)
     assert p.batch == 8
     assert np.all(np.asarray(p.m_valid[3:]) == 0)
-    sol = solve_batch_lp(p, method="rgb")
-    direct = solve_batch_lp(b, method="rgb")
+    rgb = get_solver(SolverSpec(backend="rgb", tile=32, chunk=0))
+    sol = rgb.solve(p)
+    direct = rgb.solve(b)
     np.testing.assert_array_equal(np.asarray(sol.x[:3]),
                                   np.asarray(direct.x))
 
@@ -348,8 +349,8 @@ def test_roundtrip_kernel_interpret():
     sched.flush()
     for (A, b, c), f in zip(reqs, futs):
         r = f.result(timeout=120.0)
-        direct = solve_batch_lp(make_batch(A, b, c), method="kernel",
-                                interpret=True)
+        direct = get_solver(SolverSpec(
+            backend="kernel", interpret=True)).solve(make_batch(A, b, c))
         assert bool(direct.feasible[0]) == r.feasible
         np.testing.assert_allclose(np.asarray(direct.x[0]), r.x,
                                    rtol=1e-5, atol=1e-5)
@@ -718,7 +719,8 @@ def test_bench_smoke_tiny():
 def test_sharded_matches_single_device(multidevice):
     code = """
 import jax, numpy as np
-from repro.core import make_batch, solve_batch_lp
+from repro.core import make_batch
+from repro.solver import SolverSpec, get_solver
 from repro.serve_lp import BatchScheduler
 assert len(jax.devices()) == 4
 rng = np.random.default_rng(0)
@@ -735,7 +737,8 @@ futs = [sched.submit(*r) for r in reqs]
 sched.flush()
 for (A, b, c), f in zip(reqs, futs):
     r = f.result(timeout=60.0)
-    d = solve_batch_lp(make_batch(A, b, c), method="rgb", tile=8)
+    d = get_solver(SolverSpec(backend="rgb", tile=8,
+                              chunk=0)).solve(make_batch(A, b, c))
     assert bool(d.feasible[0]) == r.feasible
     np.testing.assert_allclose(np.asarray(d.x[0]), r.x, rtol=1e-5,
                                atol=1e-5)

@@ -1,19 +1,16 @@
 """The unified SolverSpec/Solver front end: validation, hashability,
-jit/vmap composability, backend resolution, the core.solve_batch_lp
-deprecation shim, and cross-backend equivalence properties."""
-import warnings
-
+jit/vmap composability, backend resolution, and cross-backend
+equivalence properties (Seidel exact backends and the first-order pdhg
+backend)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-import repro.core.seidel as seidel
 from repro.core import (LPBatch, adversarial_lp, infeasible_lp,
                         make_batch, pack, ragged_feasible_lp,
-                        random_feasible_lp, solve_batch_lp, split_batch,
-                        unpack)
+                        random_feasible_lp, split_batch, unpack)
 from repro.solver import Solver, SolverSpec, get_solver, solve_with_spec
 
 TOL_5SIG = 5e-4  # the paper's 5-significant-figure comparison tolerance
@@ -23,8 +20,12 @@ TOL_5SIG = 5e-4  # the paper's 5-significant-figure comparison tolerance
 
 def test_spec_validates_at_construction():
     SolverSpec()  # defaults are valid
-    with pytest.raises(ValueError):
+    SolverSpec(backend="pdhg", iter_block=64, restart_period=0,
+               tol=1e-6, max_iters=5000)  # pdhg knobs on pdhg: fine
+    with pytest.raises(ValueError) as err:
         SolverSpec(backend="bogus")
+    for name in ("naive", "rgb", "kernel", "pdhg", "auto"):
+        assert name in str(err.value)  # error lists the full backend set
     with pytest.raises(ValueError):
         SolverSpec(tile=0)
     with pytest.raises(ValueError):
@@ -37,6 +38,22 @@ def test_spec_validates_at_construction():
         SolverSpec(dtype="int32")
     with pytest.raises(ValueError):
         SolverSpec(seed="zero")
+    # pdhg-only knobs are rejected on every other backend, auto included
+    with pytest.raises(ValueError, match="pdhg-only"):
+        SolverSpec(backend="rgb", tol=1e-6)
+    with pytest.raises(ValueError, match="pdhg-only"):
+        SolverSpec(backend="auto", iter_block=64)
+    with pytest.raises(ValueError, match="pdhg-only"):
+        SolverSpec(backend="kernel", restart_period=512, max_iters=100)
+    # and value-validated on pdhg itself
+    with pytest.raises(ValueError):
+        SolverSpec(backend="pdhg", iter_block=0)
+    with pytest.raises(ValueError):
+        SolverSpec(backend="pdhg", restart_period=-1)
+    with pytest.raises(ValueError):
+        SolverSpec(backend="pdhg", tol=0.0)
+    with pytest.raises(ValueError):
+        SolverSpec(backend="pdhg", max_iters=0)
 
 
 def test_spec_hashable_value_semantics():
@@ -223,44 +240,6 @@ def test_dtype_cast_on_entry():
     np.testing.assert_array_equal(np.asarray(got.x), np.asarray(ref.x))
 
 
-# -- deprecation shim ----------------------------------------------------
-
-def test_shim_warns_once_and_matches_spec_api(monkeypatch):
-    monkeypatch.setattr(seidel, "_DEPRECATION_WARNED", False)
-    lp = random_feasible_lp(jax.random.key(6), 12, 18)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        old = solve_batch_lp(lp, method="rgb", tile=8, chunk=64)
-        solve_batch_lp(lp, method="naive")
-    deps = [w for w in caught if issubclass(w.category,
-                                            DeprecationWarning)]
-    assert len(deps) == 1, "shim must warn exactly once per process"
-    new = SolverSpec(backend="rgb", tile=8,
-                     chunk=64).build().solve(lp)
-    np.testing.assert_array_equal(np.asarray(old.x), np.asarray(new.x))
-    np.testing.assert_array_equal(np.asarray(old.feasible),
-                                  np.asarray(new.feasible))
-
-
-def test_shim_kernel_and_key_paths_match():
-    lp = random_feasible_lp(jax.random.key(7), 8, 20)
-    old = solve_batch_lp(lp, method="kernel", interpret=True)
-    new = SolverSpec(backend="kernel",
-                     interpret=True).build().solve(lp)
-    np.testing.assert_array_equal(np.asarray(old.x), np.asarray(new.x))
-    k = jax.random.key(3)
-    old_k = solve_batch_lp(lp, method="rgb", key=k)
-    new_k = SolverSpec(backend="rgb").build().solve(lp, key=k)
-    np.testing.assert_array_equal(np.asarray(old_k.x),
-                                  np.asarray(new_k.x))
-
-
-def test_shim_rejects_unknown_method():
-    lp = random_feasible_lp(jax.random.key(8), 2, 5)
-    with pytest.raises(ValueError):
-        solve_batch_lp(lp, method="simplex")
-
-
 # -- satellite regressions (core.lp) -------------------------------------
 
 def test_make_batch_coerces_mismatched_dtypes():
@@ -402,3 +381,16 @@ def test_backends_agree_property(kind, seed, batch, m):
                 np.asarray(sol.objective)[feas],
                 rtol=TOL_5SIG, atol=TOL_5SIG,
                 err_msg=f"objective mismatch: {spec}")
+    # the first-order backend classifies feasibility identically and
+    # matches the exact optimum to its KKT stopping tolerance (looser
+    # than the vertex-exact Seidel agreement above)
+    pdhg = get_solver(SolverSpec(backend="pdhg", tol=1e-5)).solve(lp)
+    np.testing.assert_array_equal(np.asarray(ref.feasible),
+                                  np.asarray(pdhg.feasible),
+                                  err_msg="feasibility mismatch: pdhg")
+    feas = np.asarray(ref.feasible)
+    if feas.any():
+        np.testing.assert_allclose(np.asarray(ref.objective)[feas],
+                                   np.asarray(pdhg.objective)[feas],
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg="objective mismatch: pdhg")

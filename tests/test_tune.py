@@ -127,7 +127,7 @@ def test_default_table_loads():
     t = default_table()
     assert isinstance(t, TuningTable)
     for e in t.entries():
-        assert e.key.backend in ("naive", "rgb", "kernel")
+        assert e.key.backend in ("naive", "rgb", "kernel", "pdhg")
         assert e.tile >= 1 and e.chunk >= 0
 
 
@@ -162,8 +162,21 @@ def test_candidate_space_validity():
 
 def test_default_backends_by_platform():
     from repro.tune import default_backends
-    assert default_backends("cpu") == ("naive", "rgb")
-    assert default_backends("tpu-v4") == ("rgb", "kernel")
+    assert default_backends("cpu") == ("naive", "rgb", "pdhg")
+    assert default_backends("tpu-v4") == ("rgb", "kernel", "pdhg")
+
+
+def test_pdhg_candidate_space():
+    """pdhg candidates carry (iter_block, restart_period) in the
+    (tile, chunk) slots; a period shorter than one block is dropped."""
+    cands = candidate_space(2048, 64, backends=("pdhg",))
+    assert cands and all(c.backend == "pdhg" for c in cands)
+    for c in cands:
+        assert c.tile >= 1                       # iter_block
+        assert c.chunk == 0 or c.chunk >= c.tile  # period >= one block
+        assert c.label() == f"pdhg/ib{c.tile}/rp{c.chunk}"
+    # shape-independent schedule: the grid is the same at any shape
+    assert cands == candidate_space(64, 8, backends=("pdhg",))
 
 
 # -- runner ---------------------------------------------------------------
@@ -297,6 +310,55 @@ def test_auto_backend_picks_measured_winner():
         spec = SolverSpec(backend="auto").resolve_for_shape(21, 9)
         assert spec.backend == ("kernel" if jax.default_backend() == "tpu"
                                 else "rgb")
+
+
+def test_auto_routes_small_m_kernel_big_m_pdhg():
+    """The crossover acceptance contract: with measurements saying the
+    kernel wins at small m and pdhg wins at large m, ``backend="auto"``
+    routes each shape to its measured winner — and a pdhg winner's
+    geometry slots come back as the (iter_block, restart_period)
+    schedule, not as tile/chunk."""
+    kind = current_device_kind()
+    mk = lambda backend, mb, tile, chunk, us: TableEntry(
+        TableKey(kind, backend, "float32", m_bucket=mb, batch_bucket=0),
+        tile=tile, chunk=chunk, us_per_lp=us)
+    t = TuningTable([
+        mk("kernel", 64, 8, 0, 1.0),
+        mk("pdhg", 64, 64, 512, 40.0),
+        mk("kernel", 4096, 8, 0, 900.0),
+        mk("pdhg", 4096, 128, 2048, 30.0),
+    ])
+    with use_table(t):
+        small = SolverSpec(backend="auto").resolve_for_shape(48, 32)
+        big = SolverSpec(backend="auto").resolve_for_shape(4000, 32)
+    assert small.backend == "kernel"
+    assert (small.tile, small.chunk) == (8, 0)
+    assert big.backend == "pdhg"
+    assert (big.iter_block, big.restart_period) == (128, 2048)
+    assert big.is_shape_resolved
+
+
+def test_pdhg_schedule_resolution_precedence():
+    """explicit > table > default for the pdhg iteration schedule."""
+    from repro.pdhg import DEFAULT_ITER_BLOCK, DEFAULT_RESTART_PERIOD
+    kind = current_device_kind()
+    t = TuningTable([TableEntry(
+        TableKey(kind, "pdhg", "float32", m_bucket=32, batch_bucket=16),
+        tile=128, chunk=2048, us_per_lp=1.0)])
+    with use_table(t):
+        tuned = SolverSpec(backend="pdhg").resolve_for_shape(21, 9)
+        assert (tuned.iter_block, tuned.restart_period) == (128, 2048)
+        half = SolverSpec(backend="pdhg",
+                          iter_block=32).resolve_for_shape(21, 9)
+        assert (half.iter_block, half.restart_period) == (32, 2048)
+    with use_table(TuningTable()):
+        bare = SolverSpec(backend="pdhg").resolve_for_shape(21, 9)
+        assert (bare.iter_block, bare.restart_period) == (
+            DEFAULT_ITER_BLOCK, DEFAULT_RESTART_PERIOD)
+    # tile/chunk are inert for pdhg but still pinned concrete so the
+    # serving layer's shape-resolved consumers keep working
+    assert bare.is_shape_resolved
+    assert bare.tile is not None and bare.chunk is not None
 
 
 def test_auto_backend_reaches_built_solver():
