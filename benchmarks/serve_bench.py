@@ -7,7 +7,8 @@ numbers.
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.serve_lp.bench import BenchConfig, run_traffic, smoke_config
+from repro.serve_lp.bench import (BenchConfig, run_rpc_traffic,
+                                  run_traffic, smoke_config)
 
 
 def run(full: bool = False) -> None:
@@ -40,3 +41,17 @@ def run(full: bool = False) -> None:
              f"|inflight_max={snap['inflight_max']}"
              f"|overlapped={snap['overlapped_dispatches']}"
              f"|idle_s={snap['device_idle_s_est']:.3f}")
+    # Same smoke traffic through the HTTP front end: what the network
+    # layer (parse + admission + loop hop) adds over in-process submit,
+    # plus the overload-phase shed rate.
+    rpc_cfg = smoke_config()
+    rpc_cfg.rpc = True
+    rep = run_rpc_traffic(rpc_cfg, quiet=True)
+    c, o = rep["closed_loop"], rep["overload"]
+    emit("serve_rpc_http", c["p50_ms"] / 1e3,
+         f"rps={c['rps']:.1f}"
+         f"|p50ms={c['p50_ms']:.2f}"
+         f"|p99ms={c['p99_ms']:.2f}"
+         f"|errors={c['errors']}"
+         f"|shed_rate={o['shed_rate']:.3f}"
+         f"|retry_after={int(o['retry_after_on_429'])}")

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Container entrypoint for the LP RPC server: pin the measured-fast
+# runtime environment, then exec `python -m repro.serve_lp.rpc`.
+#
+# Every export here is overridable from the outside environment
+# (`VAR=... serve_entrypoint.sh` wins); CLI flags pass through, e.g.
+#
+#   scripts/serve_entrypoint.sh --port 8080 --target-p99-ms 50
+set -euo pipefail
+
+# tcmalloc beats glibc malloc on the serving hot path (flush-buffer
+# churn + XLA host allocations); skip silently where it isn't baked in.
+TCMALLOC=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [[ -z "${LD_PRELOAD:-}" && -f "$TCMALLOC" ]]; then
+    export LD_PRELOAD="$TCMALLOC"
+    # and keep it quiet about the large flush-buffer arenas
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+fi
+
+# Silence the TF/XLA C++ startup chatter that would interleave with the
+# server's own stdout lines.
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# On CPU hosts, split the host platform into multiple XLA devices so
+# flushes shard the same way they do on a multi-chip accelerator.
+# Leave unset for real TPU/GPU machines (their device count is real).
+if [[ -n "${SERVE_HOST_DEVICES:-}" ]]; then
+    export XLA_FLAGS="--xla_force_host_platform_device_count=${SERVE_HOST_DEVICES} ${XLA_FLAGS:-}"
+fi
+
+# x64 policy: allow fp64 specs (`--method` + float64 dtype) without
+# forcing every default array to fp64.
+export JAX_ENABLE_X64="${JAX_ENABLE_X64:-1}"
+export JAX_DEFAULT_DTYPE_BITS="${JAX_DEFAULT_DTYPE_BITS:-32}"
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="${PYTHONPATH:+$PYTHONPATH:}$(pwd)/src"
+
+exec /usr/bin/env python3 -m repro.serve_lp.rpc "$@"

@@ -55,6 +55,13 @@ class BenchConfig:
     max_inflight: int = 2         # dispatch backpressure bound
     open_loop: bool = False       # saturating burst: ignore `rate`
     assert_overlap: bool = False  # require >=2 flushes seen in flight
+    # --rpc mode: drive the HTTP front end instead of in-process submit
+    rpc: bool = False
+    rpc_clients: int = 8          # closed-loop client threads
+    rpc_burst: int = 0            # open-loop overload posts (0 = 2x requests)
+    rpc_target_p99_ms: Optional[float] = None   # enable SLO controller
+    rpc_p99_bound_ms: float = 2500.0            # --assert-rpc bound
+    assert_rpc: bool = False      # enforce p99 + shed-rate bounds
 
 
 def smoke_config() -> BenchConfig:
@@ -223,6 +230,242 @@ def _check_against_direct(cfg: BenchConfig, results: List) -> None:
                                        rtol=1e-5, atol=1e-5)
 
 
+# -- the RPC (HTTP) driver ------------------------------------------------
+
+BURST_TENANT = "burst"          # overload-phase tenant: tiny quota
+BURST_QUOTA = (200.0, 64.0)     # (rate LPs/s, burst) for that tenant
+
+
+def _rpc_post(conn, obj, headers=None):
+    """POST /v1/solve on a keep-alive connection; (status, parsed)."""
+    import json
+    conn.request("POST", "/v1/solve", json.dumps(obj),
+                 {"Content-Type": "application/json", **(headers or {})})
+    resp = conn.getresponse()
+    return resp.status, json.loads(resp.read() or b"{}")
+
+
+def _rpc_problem(cfg: BenchConfig, i: int):
+    A, b, c, _ = make_request(cfg, i)
+    return {"A": A.tolist(), "b": b.tolist(), "c": c.tolist()}
+
+
+def run_rpc_traffic(cfg: BenchConfig, *, quiet: bool = False) -> Dict:
+    """Drive the HTTP front end: closed-loop latency phase (N client
+    threads, keep-alive), then an open-loop overload phase under a
+    deliberately tiny tenant quota so shedding is observable, then a
+    /metrics scrape validated as Prometheus text.  Returns a report
+    dict; ``cfg.assert_rpc`` turns the p99/shed/correctness claims into
+    hard checks (the CI smoke)."""
+    import http.client
+    import threading as _threading
+    from repro.serve_lp.rpc import (AdmissionPolicy, QuotaManager,
+                                    make_frontend, validate_exposition)
+    from repro.serve_lp.rpc.server import run_in_thread
+
+    spec = SolverSpec(backend=cfg.method, tile=cfg.tile, chunk=cfg.chunk,
+                      interpret=cfg.interpret)
+    frontend = make_frontend(
+        spec, max_batch=cfg.max_batch, max_wait_s=cfg.max_wait_s,
+        max_inflight=cfg.max_inflight, pipeline=cfg.pipeline,
+        policy=AdmissionPolicy(
+            m_max=max(cfg.m_max, 8), batch_max=max(4 * cfg.max_batch, 256),
+            max_pending=1024, max_queue_age_s=0.5),
+        quotas=QuotaManager(rate=1e6, burst=1e6,
+                            per_tenant={BURST_TENANT: BURST_QUOTA}),
+        target_p99_s=(cfg.rpc_target_p99_ms / 1e3
+                      if cfg.rpc_target_p99_ms is not None else None))
+    port, stop = run_in_thread(frontend)
+    t_wall0 = time.perf_counter()
+    try:
+        def connect():
+            return http.client.HTTPConnection("127.0.0.1", port,
+                                              timeout=120)
+
+        # Warmup: compile the bucket-ladder executables through the
+        # network path (one size-triggered full batch + one
+        # wait-triggered single per bucket) so the measured phases see
+        # warm serving behaviour, as the in-process bench does.
+        if cfg.warmup:
+            t0 = time.perf_counter()
+            conn = connect()
+            rng = np.random.default_rng(
+                np.random.SeedSequence([cfg.seed, 0xAB]))
+            sizes = [m for m in (8, 16, 32, 64, 128, 256, 512, 1024)
+                     if cfg.m_min <= m <= cfg.m_max]
+            for m in sizes:
+                A, b, c = _feasible(rng, m)
+                prob = {"A": A.tolist(), "b": b.tolist(), "c": c.tolist()}
+                st, _ = _rpc_post(conn, {"problems":
+                                         [prob] * cfg.max_batch})
+                assert st == 200, f"warmup batch post failed: {st}"
+                st, _ = _rpc_post(conn, prob)
+                assert st == 200, f"warmup single post failed: {st}"
+            conn.close()
+            if not quiet:
+                print(f"[serve_lp.bench --rpc] warmup over HTTP in "
+                      f"{time.perf_counter() - t0:.2f}s")
+
+        # Phase 1 — closed loop: client threads issue requests
+        # back-to-back over keep-alive connections; per-request wall
+        # latency measured client-side.
+        n_clients = max(1, cfg.rpc_clients)
+        lat_ms: List[float] = []
+        closed_errors: List[int] = []
+        lock = _threading.Lock()
+
+        def client(worker: int) -> None:
+            conn = connect()
+            my_lat, my_err = [], []
+            for i in range(worker, cfg.requests, n_clients):
+                t = time.perf_counter()
+                st, _body = _rpc_post(conn, _rpc_problem(cfg, i))
+                dt = (time.perf_counter() - t) * 1e3
+                if st == 200:
+                    my_lat.append(dt)
+                else:
+                    my_err.append(st)
+            conn.close()
+            with lock:
+                lat_ms.extend(my_lat)
+                closed_errors.extend(my_err)
+
+        threads = [_threading.Thread(target=client, args=(w,))
+                   for w in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        closed_wall = time.perf_counter() - t0
+
+        # Phase 2 — open-loop overload: hammer from a tiny-quota tenant
+        # so admission demonstrably sheds with 429 instead of queueing.
+        burst_n = cfg.rpc_burst or 2 * cfg.requests
+        statuses: List[int] = []
+        retry_after_seen: List[bool] = []
+
+        def burster(worker: int) -> None:
+            import json as _json
+            conn = connect()
+            my_st, my_ra = [], []
+            for i in range(worker, burst_n, 16):
+                conn.request("POST", "/v1/solve",
+                             _json.dumps(_rpc_problem(cfg, i)),
+                             {"X-Tenant": BURST_TENANT})
+                resp = conn.getresponse()
+                resp.read()
+                my_st.append(resp.status)
+                if resp.status == 429:
+                    my_ra.append(resp.getheader("Retry-After")
+                                 is not None)
+            conn.close()
+            with lock:
+                statuses.extend(my_st)
+                retry_after_seen.extend(my_ra)
+
+        bursters = [_threading.Thread(target=burster, args=(w,))
+                    for w in range(16)]
+        for t in bursters:
+            t.start()
+        for t in bursters:
+            t.join()
+        accepted = sum(1 for s in statuses if s == 200)
+        shed = sum(1 for s in statuses if s == 429)
+        other = len(statuses) - accepted - shed
+
+        # Phase 3 — scrape /metrics and validate the exposition.
+        conn = connect()
+        conn.request("GET", "/metrics")
+        resp = conn.getresponse()
+        metrics_text = resp.read().decode()
+        assert resp.status == 200
+        validate_exposition(metrics_text)
+
+        # Correctness: a deterministic sample of closed-loop requests
+        # re-posted and compared against a direct solver-spec solve.
+        if cfg.check:
+            from repro.core import make_batch
+            from repro.solver import get_solver
+            solver = get_solver(spec)
+            reconn = connect()
+            idxs = np.linspace(0, cfg.requests - 1,
+                               cfg.check).astype(int)
+            for i in idxs:
+                A, b, c, _ = make_request(cfg, int(i))
+                st, body = _rpc_post(reconn, _rpc_problem(cfg, int(i)))
+                assert st == 200, f"check repost {i} failed: {st}"
+                sol = solver.solve(make_batch(A, b, c))
+                r = body["result"]
+                assert bool(sol.feasible[0]) == r["feasible"]
+                if r["feasible"]:
+                    np.testing.assert_array_equal(
+                        np.asarray(sol.x[0]),
+                        np.asarray(r["x"], np.float32).reshape(2))
+            reconn.close()
+        conn.close()
+    finally:
+        stop()
+
+    lat = np.asarray(sorted(lat_ms)) if lat_ms else np.zeros(1)
+    report = {
+        "rpc_port": port,
+        "wall_s": time.perf_counter() - t_wall0,
+        "closed_loop": {
+            "requests": cfg.requests,
+            "ok": len(lat_ms),
+            "errors": len(closed_errors),
+            "wall_s": closed_wall,
+            "rps": (len(lat_ms) / closed_wall if closed_wall > 0
+                    else 0.0),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+        },
+        "overload": {
+            "requests": burst_n,
+            "accepted": accepted,
+            "shed_429": shed,
+            "other": other,
+            "shed_rate": shed / max(1, len(statuses)),
+            "retry_after_on_429": (all(retry_after_seen)
+                                   if retry_after_seen else False),
+        },
+        "slo": ({str(k): dataclasses.asdict(v)
+                 for k, v in frontend.slo.plans().items()}
+                if frontend.slo is not None else None),
+        "metrics_valid": True,
+        "metrics_bytes": len(metrics_text),
+    }
+    if not quiet:
+        c, o = report["closed_loop"], report["overload"]
+        print(f"[serve_lp.bench --rpc] closed-loop: {c['ok']}/"
+              f"{c['requests']} ok at {c['rps']:.1f} req/s, "
+              f"p50={c['p50_ms']:.1f}ms p99={c['p99_ms']:.1f}ms, "
+              f"{c['errors']} errors")
+        print(f"[serve_lp.bench --rpc] overload: {o['accepted']} "
+              f"accepted, {o['shed_429']} shed with 429 "
+              f"({100 * o['shed_rate']:.0f}%), {o['other']} other")
+        print(f"[serve_lp.bench --rpc] /metrics: valid Prometheus "
+              f"text, {report['metrics_bytes']} bytes")
+    if cfg.assert_rpc:
+        assert not closed_errors, (
+            f"closed-loop phase had non-200 responses: "
+            f"{sorted(set(closed_errors))}")
+        assert report["closed_loop"]["p99_ms"] <= cfg.rpc_p99_bound_ms, (
+            f"closed-loop p99 {report['closed_loop']['p99_ms']:.1f}ms "
+            f"exceeds the bound {cfg.rpc_p99_bound_ms}ms")
+        assert shed >= 1, "overload phase never shed with 429"
+        assert accepted >= 1, "overload phase never admitted anything"
+        assert other == 0, f"unexpected statuses in overload: {other}"
+        assert report["overload"]["retry_after_on_429"], (
+            "429 responses were missing Retry-After")
+        if not quiet:
+            print("[serve_lp.bench --rpc] assertions ok: p99 within "
+                  "bound, overload shed with 429 + Retry-After, "
+                  "answers match direct solves")
+    return report
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -248,6 +491,23 @@ def main(argv=None) -> None:
                     help="saturating burst: submit with no rate throttle")
     ap.add_argument("--assert-overlap", action="store_true",
                     help="fail unless >=2 flushes were in flight at once")
+    ap.add_argument("--rpc", action="store_true",
+                    help="drive the HTTP front end (closed-loop latency "
+                         "phase + open-loop overload phase + /metrics "
+                         "scrape) instead of in-process submit")
+    ap.add_argument("--rpc-clients", type=int, default=8,
+                    help="closed-loop client threads (--rpc)")
+    ap.add_argument("--rpc-burst", type=int, default=0,
+                    help="overload-phase posts (--rpc; 0 = 2x requests)")
+    ap.add_argument("--rpc-target-p99-ms", type=float, default=None,
+                    help="enable the SLO controller at this target "
+                         "(--rpc)")
+    ap.add_argument("--rpc-p99-bound-ms", type=float, default=2500.0,
+                    help="closed-loop p99 bound --assert-rpc enforces")
+    ap.add_argument("--assert-rpc", action="store_true",
+                    help="fail unless p99 is within bound, overload "
+                         "sheds with 429 + Retry-After, and answers "
+                         "match direct solves (--rpc)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -265,7 +525,16 @@ def main(argv=None) -> None:
     cfg.max_inflight = args.max_inflight
     cfg.open_loop = args.open_loop
     cfg.assert_overlap = args.assert_overlap
-    run_traffic(cfg)
+    cfg.rpc = args.rpc
+    cfg.rpc_clients = args.rpc_clients
+    cfg.rpc_burst = args.rpc_burst
+    cfg.rpc_target_p99_ms = args.rpc_target_p99_ms
+    cfg.rpc_p99_bound_ms = args.rpc_p99_bound_ms
+    cfg.assert_rpc = args.assert_rpc
+    if cfg.rpc:
+        run_rpc_traffic(cfg)
+    else:
+        run_traffic(cfg)
 
 
 if __name__ == "__main__":

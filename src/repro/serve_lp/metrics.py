@@ -169,11 +169,15 @@ class ServeMetrics:
                 self._t0 = self._t_last
 
     def percentile(self, p: float) -> float:
-        """Linear-interpolated percentile of recorded latencies, seconds."""
+        """Linear-interpolated percentile of recorded latencies,
+        seconds.  An empty reservoir yields 0.0, not NaN — a fresh
+        server's ``/metrics`` scrape must render finite Prometheus
+        sample lines (Prometheus text parsers reject malformed values,
+        and ``NaN`` percentiles poison alert rules)."""
         with self._lock:
             xs = sorted(self._latencies)
         if not xs:
-            return float("nan")
+            return 0.0
         if len(xs) == 1:
             return xs[0]
         k = (p / 100.0) * (len(xs) - 1)
@@ -186,8 +190,10 @@ class ServeMetrics:
             elapsed = ((self._t_last - self._t0)
                        if self._t0 is not None and self._t_last is not None
                        else 0.0)
+            # Empty-state values are 0.0 (not NaN) so snapshot numbers
+            # are always finite — see percentile().
             n_lat = len(self._latencies)
-            mean = (sum(self._latencies) / n_lat) if n_lat else float("nan")
+            mean = (sum(self._latencies) / n_lat) if n_lat else 0.0
             prob_total = self.problems_real + self.problems_padded
             snap = {
                 "n_solved": self.n_solved,
@@ -195,7 +201,7 @@ class ServeMetrics:
                 "flush_reasons": dict(self.flush_reasons),
                 "elapsed_s": elapsed,
                 "throughput_lps": (self.n_solved / elapsed
-                                   if elapsed > 0 else float("nan")),
+                                   if elapsed > 0 else 0.0),
                 "latency_mean_ms": mean * 1e3,
                 "latency_samples": n_lat,
                 "latency_seen": self.lat_seen,

@@ -1,0 +1,91 @@
+"""CLI entry for the RPC server: ``python -m repro.serve_lp.rpc``.
+
+The production launch path is ``scripts/serve_entrypoint.sh``, which
+sets the measured-fast runtime environment (tcmalloc preload, XLA
+flags, log levels) and then execs this module.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+
+from repro.serve_lp.rpc.admission import AdmissionPolicy
+from repro.serve_lp.rpc.quota import QuotaManager
+from repro.serve_lp.rpc.server import RpcServer, make_frontend
+from repro.solver import SolverSpec
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve_lp.rpc",
+        description="HTTP front end for the batched 2-D LP solver")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--method", default="rgb",
+                    choices=("rgb", "kernel", "naive", "pdhg"),
+                    help="solver backend for every flush")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="scheduler-wide size trigger (the SLO "
+                         "controller may cap it lower per bucket)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="scheduler-wide wait trigger")
+    ap.add_argument("--max-inflight", type=int, default=2)
+    ap.add_argument("--no-pipeline", action="store_true")
+    ap.add_argument("--target-p99-ms", type=float, default=None,
+                    help="enable the SLO controller: derive per-bucket "
+                         "max_batch/max_wait from measured flush "
+                         "latency to hold this p99")
+    ap.add_argument("--m-max", type=int, default=4096,
+                    help="reject LPs with more constraints than this")
+    ap.add_argument("--batch-max", type=int, default=1024,
+                    help="reject requests with more LPs than this")
+    ap.add_argument("--max-pending", type=int, default=4096,
+                    help="shed (429) when this many LPs are queued and "
+                         "the in-flight depth is at its bound")
+    ap.add_argument("--max-queue-age-ms", type=float, default=500.0,
+                    help="shed (429) when the oldest queued request "
+                         "has waited this long")
+    ap.add_argument("--quota-rate", type=float, default=10_000.0,
+                    help="per-tenant sustained LPs/s")
+    ap.add_argument("--quota-burst", type=float, default=2_000.0,
+                    help="per-tenant instantaneous LP burst")
+    args = ap.parse_args(argv)
+
+    frontend = make_frontend(
+        SolverSpec(backend=args.method),
+        max_batch=args.max_batch,
+        max_wait_s=args.max_wait_ms / 1e3,
+        max_inflight=args.max_inflight,
+        pipeline=not args.no_pipeline,
+        policy=AdmissionPolicy(
+            m_max=args.m_max, batch_max=args.batch_max,
+            max_pending=args.max_pending,
+            max_queue_age_s=args.max_queue_age_ms / 1e3),
+        quotas=QuotaManager(rate=args.quota_rate,
+                            burst=args.quota_burst),
+        target_p99_s=(args.target_p99_ms / 1e3
+                      if args.target_p99_ms is not None else None),
+    )
+
+    async def _serve():
+        server = RpcServer(frontend, args.host, args.port)
+        await server.start()
+        slo = ("off" if frontend.slo is None
+               else f"p99<={args.target_p99_ms:.0f}ms")
+        print(f"[serve_lp.rpc] listening on http://{args.host}:"
+              f"{server.port}  backend={args.method} "
+              f"devices={frontend.scheduler.n_devices} slo={slo}",
+              flush=True)
+        try:
+            await server.serve_forever()
+        finally:
+            await server.aclose()
+
+    try:
+        asyncio.run(_serve())
+    except KeyboardInterrupt:
+        pass
+
+
+if __name__ == "__main__":
+    main()

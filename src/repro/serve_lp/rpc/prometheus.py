@@ -1,0 +1,182 @@
+"""Prometheus text exposition (version 0.0.4) for the RPC server.
+
+Renders the scheduler's :class:`~repro.serve_lp.metrics.ServeMetrics`
+snapshot plus the RPC layer's own counters as a ``GET /metrics``
+scrape.  No client library: the text format is a few lines of
+``# HELP`` / ``# TYPE`` plus ``name{labels} value`` samples, and
+growing a dependency for that would violate the no-new-deps rule.
+
+Two format obligations are enforced here:
+
+* every sample value is rendered finite — Prometheus rejects sample
+  lines it cannot parse, and one malformed line poisons the whole
+  scrape, so non-finite values are coerced to 0 (the metrics layer
+  already guards its empty-reservoir cases; this is the belt to that
+  suspenders);
+* label values are escaped per the exposition spec (backslash, quote,
+  newline).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+def _finite(v) -> float:
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        return 0.0
+    return f if math.isfinite(f) else 0.0
+
+
+def _escape(label: str) -> str:
+    return (str(label).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+class _Writer:
+    def __init__(self, prefix: str):
+        self.prefix = prefix
+        self.lines: List[str] = []
+
+    def family(self, name: str, kind: str, help_: str,
+               samples: List[Tuple[Dict[str, str], float]]) -> None:
+        """One metric family: HELP/TYPE then its samples."""
+        full = f"{self.prefix}_{name}"
+        self.lines.append(f"# HELP {full} {help_}")
+        self.lines.append(f"# TYPE {full} {kind}")
+        for labels, value in samples:
+            lab = ("{" + ",".join(
+                f'{k}="{_escape(v)}"' for k, v in sorted(labels.items()))
+                + "}") if labels else ""
+            self.lines.append(f"{full}{lab} {_finite(value)}")
+
+    def scalar(self, name: str, kind: str, help_: str, value) -> None:
+        self.family(name, kind, help_, [({}, value)])
+
+    def render(self) -> str:
+        return "\n".join(self.lines) + "\n"
+
+
+def render_metrics(snapshot: Dict, *,
+                   rpc: Optional[Dict] = None,
+                   quotas: Optional[Dict] = None,
+                   prefix: str = "repro_serve") -> str:
+    """The full scrape body: scheduler snapshot + RPC counters.
+
+    ``snapshot`` is ``ServeMetrics.snapshot(cache_stats)``; ``rpc`` is
+    :meth:`~repro.serve_lp.rpc.server.RpcCounters.snapshot`; ``quotas``
+    is :meth:`~repro.serve_lp.rpc.quota.QuotaManager.snapshot`.
+    """
+    w = _Writer(prefix)
+
+    # -- scheduler/solver plane ------------------------------------------
+    w.scalar("solved_total", "counter",
+             "LPs solved through the scheduler", snapshot["n_solved"])
+    w.family("flushes_total", "counter",
+             "Scheduler flushes by trigger reason",
+             [({"reason": r}, v)
+              for r, v in sorted(snapshot["flush_reasons"].items())]
+             or [({}, 0)])
+    w.scalar("dispatched_total", "counter",
+             "Flushes dispatched to the device",
+             snapshot["n_dispatched"])
+    w.scalar("inflight_flushes", "gauge",
+             "Flushes currently dispatched and not completed",
+             snapshot["inflight_now"])
+    w.scalar("inflight_flushes_max", "gauge",
+             "High-watermark of concurrently in-flight flushes",
+             snapshot["inflight_max"])
+    w.scalar("overlapped_dispatches_total", "counter",
+             "Dispatches that found the device already busy",
+             snapshot["overlapped_dispatches"])
+    w.scalar("device_idle_seconds_total", "counter",
+             "Estimated seconds the device sat idle between flushes",
+             snapshot["device_idle_s_est"])
+    w.scalar("solve_seconds_total", "counter",
+             "Cumulative dispatch-to-complete device service time",
+             snapshot["solve_seconds"])
+    w.scalar("assemble_seconds_total", "counter",
+             "Cumulative host-side flush assembly time",
+             snapshot["assemble_seconds"])
+    w.scalar("throughput_lps", "gauge",
+             "Solved LPs per second over the active traffic window",
+             snapshot["throughput_lps"])
+    w.family("latency_seconds", "summary",
+             "End-to-end submit-to-result latency (reservoir-sampled)",
+             [({"quantile": "0.5"}, snapshot["latency_p50_ms"] / 1e3),
+              ({"quantile": "0.99"}, snapshot["latency_p99_ms"] / 1e3)])
+    w.scalar("latency_seconds_count", "counter",
+             "Latency samples offered to the reservoir",
+             snapshot["latency_seen"])
+    w.scalar("padding_waste_problems_ratio", "gauge",
+             "Fraction of solved problem slots that were padding",
+             snapshot["padding_waste_problems"])
+    w.scalar("padding_waste_cells_ratio", "gauge",
+             "Fraction of solved constraint cells that were padding",
+             snapshot["padding_waste_cells"])
+    w.family("errors_total", "counter",
+             "Scheduler-side errors by kind",
+             [({"kind": k}, v)
+              for k, v in sorted(snapshot["errors"].items())]
+             or [({}, 0)])
+    cache = snapshot.get("cache")
+    if cache is not None:
+        w.scalar("executables_built", "gauge",
+                 "Distinct compiled flush executables", cache["size"])
+        w.scalar("executable_cache_hits_total", "counter",
+                 "Executable cache hits", cache["hits"])
+        w.scalar("executable_cache_misses_total", "counter",
+                 "Executable cache misses", cache["misses"])
+
+    # -- RPC plane --------------------------------------------------------
+    if rpc is not None:
+        w.family("rpc_requests_total", "counter",
+                 "HTTP requests by endpoint and status code",
+                 [({"endpoint": e, "code": str(c)}, v)
+                  for (e, c), v in sorted(rpc["requests"].items())]
+                 or [({}, 0)])
+        w.family("rpc_shed_total", "counter",
+                 "Requests shed before solving, by reason",
+                 [({"reason": r}, v)
+                  for r, v in sorted(rpc["shed"].items())]
+                 or [({}, 0)])
+        w.scalar("rpc_inprogress", "gauge",
+                 "Solve requests currently being handled",
+                 rpc["inprogress"])
+        w.scalar("rpc_lps_accepted_total", "counter",
+                 "LPs admitted past admission control",
+                 rpc["lps_accepted"])
+    if quotas is not None:
+        w.family("rpc_quota_admitted_total", "counter",
+                 "LPs admitted by the per-tenant token bucket",
+                 [({"tenant": t}, q["admitted"])
+                  for t, q in sorted(quotas.items())] or [({}, 0)])
+        w.family("rpc_quota_rejected_total", "counter",
+                 "LPs rejected by the per-tenant token bucket",
+                 [({"tenant": t}, q["rejected"])
+                  for t, q in sorted(quotas.items())] or [({}, 0)])
+        w.family("rpc_quota_tokens", "gauge",
+                 "Tokens currently available per tenant",
+                 [({"tenant": t}, q["tokens"])
+                  for t, q in sorted(quotas.items())] or [({}, 0)])
+    return w.render()
+
+
+def validate_exposition(text: str) -> None:
+    """Cheap structural check of an exposition body (used by tests and
+    the bench): every non-comment line is ``name{labels} value`` with a
+    finite float value; raises ValueError otherwise."""
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        try:
+            _, value = line.rsplit(" ", 1)
+            v = float(value)
+        except ValueError:
+            raise ValueError(f"malformed sample line: {line!r}")
+        if not math.isfinite(v):
+            raise ValueError(f"non-finite sample value: {line!r}")

@@ -1,0 +1,527 @@
+"""The asyncio HTTP front end over :class:`BatchScheduler`.
+
+Two layers, deliberately separable:
+
+* :class:`LPFrontend` — the request handler.  ``await
+  frontend.handle(Request)`` runs the whole admission pipeline
+  (validation -> deadline -> quota -> backpressure -> submit -> await
+  futures) and returns a :class:`Response`.  It never touches a
+  socket, so tests drive it directly with synthetic requests;
+* :class:`RpcServer` — a minimal HTTP/1.1 server (stdlib ``asyncio``
+  streams, keep-alive, Content-Length framing; no framework
+  dependency) that parses bytes into :class:`Request` and writes
+  :class:`Response` back.
+
+Why asyncio and not a thread pool: micro-batching *needs* many
+requests concurrently in flight — a thread-per-request front end at
+batch-128 concurrency costs 128 stacks and a scheduler fight, while
+one event loop holds thousands of pending solves as cheap coroutines
+awaiting their scheduler futures.  The two blocking edges are kept off
+the loop: ``submit`` (which can run an inline size-triggered flush and
+block on the ``max_inflight`` backpressure condition variable) runs in
+the default executor, and result waiting awaits the wrapped
+``concurrent.futures.Future`` with the request's deadline budget as
+timeout — on expiry the futures are cancelled, and the scheduler drops
+cancelled work at flush time instead of solving it.
+
+Endpoints::
+
+    POST /v1/solve   single {"A","b","c"} or batch {"problems":[...]}
+                     headers: X-Tenant (quota key),
+                              X-Deadline-Ms (latency budget)
+    GET  /metrics    Prometheus text exposition
+    GET  /healthz    process liveness (always 200 while serving)
+    GET  /readyz     scheduler accepting work (503 once closed)
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import math
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve_lp.rpc.admission import (TENANT_HEADER, AdmissionPolicy,
+                                          RpcError, check_backpressure,
+                                          deadline_budget_s,
+                                          parse_solve_payload)
+from repro.serve_lp.rpc.prometheus import CONTENT_TYPE, render_metrics
+from repro.serve_lp.rpc.quota import DEFAULT_TENANT, QuotaManager
+from repro.serve_lp.rpc.slo import SLOController
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            405: "Method Not Allowed", 413: "Payload Too Large",
+            422: "Unprocessable Entity", 429: "Too Many Requests",
+            500: "Internal Server Error", 503: "Service Unavailable",
+            504: "Gateway Timeout"}
+
+# A header/request-line longer than this is hostile, not a client.
+_MAX_HEADER_LINE = 16 << 10
+_MAX_HEADERS = 64
+
+
+@dataclasses.dataclass
+class Request:
+    """One parsed HTTP request (header keys lower-cased)."""
+
+    method: str
+    path: str
+    headers: Dict[str, str]
+    body: bytes = b""
+
+
+@dataclasses.dataclass
+class Response:
+    """One HTTP response; ``json_response``/``text_response`` build it."""
+
+    status: int
+    body: bytes
+    content_type: str = "application/json"
+    headers: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def encode(self, *, close: bool = False) -> bytes:
+        reason = _REASONS.get(self.status, "Unknown")
+        head = [f"HTTP/1.1 {self.status} {reason}",
+                f"Content-Type: {self.content_type}",
+                f"Content-Length: {len(self.body)}"]
+        head += [f"{k}: {v}" for k, v in self.headers.items()]
+        if close:
+            head.append("Connection: close")
+        return ("\r\n".join(head) + "\r\n\r\n").encode("ascii") + self.body
+
+
+def json_response(status: int, obj: Any,
+                  headers: Optional[Dict[str, str]] = None) -> Response:
+    return Response(status, json.dumps(obj).encode("utf-8"),
+                    headers=dict(headers or {}))
+
+
+def text_response(status: int, text: str) -> Response:
+    return Response(status, text.encode("utf-8"),
+                    content_type="text/plain; charset=utf-8")
+
+
+def error_response(err: RpcError) -> Response:
+    headers = {}
+    body: Dict[str, Any] = {"error": {
+        "code": err.code, "message": err.message, "status": err.status}}
+    if err.retry_after_s is not None and math.isfinite(err.retry_after_s):
+        # Retry-After is integer seconds on the wire; the body carries
+        # the precise hint for clients that can back off sub-second.
+        headers["Retry-After"] = str(max(1, math.ceil(err.retry_after_s)))
+        body["error"]["retry_after_ms"] = round(err.retry_after_s * 1e3, 3)
+    return json_response(err.status, body, headers)
+
+
+class RpcCounters:
+    """Thread-safe RPC-plane counters exported at /metrics."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.requests: Dict[Tuple[str, int], int] = {}
+        self.shed: Dict[str, int] = {}
+        self.inprogress = 0
+        self.lps_accepted = 0
+
+    def record_request(self, endpoint: str, status: int) -> None:
+        with self._lock:
+            key = (endpoint, int(status))
+            self.requests[key] = self.requests.get(key, 0) + 1
+
+    def record_shed(self, reason: str) -> None:
+        with self._lock:
+            self.shed[reason] = self.shed.get(reason, 0) + 1
+
+    def record_accepted(self, n_lps: int) -> None:
+        with self._lock:
+            self.lps_accepted += int(n_lps)
+
+    def enter(self) -> None:
+        with self._lock:
+            self.inprogress += 1
+
+    def exit(self) -> None:
+        with self._lock:
+            self.inprogress -= 1
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"requests": dict(self.requests),
+                    "shed": dict(self.shed),
+                    "inprogress": self.inprogress,
+                    "lps_accepted": self.lps_accepted}
+
+
+class LPFrontend:
+    """The socket-free request handler: admission control + scheduler.
+
+    Owns the admission policy, per-tenant quotas, the optional SLO
+    controller, and the RPC counters.  :meth:`start` installs the SLO
+    plans and starts the scheduler's wait-trigger timer; :meth:`close`
+    shuts the scheduler down (readyz goes 503, healthz stays 200 so
+    orchestrators can tell "draining" from "dead").
+    """
+
+    def __init__(self, scheduler, *,
+                 policy: Optional[AdmissionPolicy] = None,
+                 quotas: Optional[QuotaManager] = None,
+                 slo: Optional[SLOController] = None):
+        self.scheduler = scheduler
+        self.policy = policy if policy is not None else AdmissionPolicy()
+        self.quotas = quotas if quotas is not None else QuotaManager()
+        self.slo = slo
+        self.counters = RpcCounters()
+        self._dtype = np.dtype(scheduler.spec.dtype)
+        self._started = False
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> "LPFrontend":
+        if not self._started:
+            if self.slo is not None:
+                self.slo.install(self.scheduler,
+                                 m_max=self.policy.m_max)
+            self.scheduler.start()
+            self._started = True
+        return self
+
+    def close(self) -> None:
+        if self._started:
+            self._started = False
+            self.scheduler.close()
+
+    @property
+    def ready(self) -> bool:
+        return self._started and not self.scheduler.closed
+
+    # -- routing ----------------------------------------------------------
+
+    async def handle(self, req: Request) -> Response:
+        """Route one request; always returns a Response (typed errors
+        included) and records it in the RPC counters."""
+        endpoint, resp = await self._route(req)
+        self.counters.record_request(endpoint, resp.status)
+        return resp
+
+    async def _route(self, req: Request) -> Tuple[str, Response]:
+        if req.path == "/v1/solve":
+            if req.method != "POST":
+                return "solve", error_response(RpcError(
+                    405, "method_not_allowed", "use POST /v1/solve"))
+            return "solve", await self._solve(req)
+        if req.path == "/metrics":
+            return "metrics", self._metrics()
+        if req.path == "/healthz":
+            return "healthz", text_response(200, "ok\n")
+        if req.path == "/readyz":
+            if self.ready:
+                return "readyz", text_response(200, "ready\n")
+            return "readyz", text_response(503, "not ready\n")
+        return "other", error_response(RpcError(
+            404, "not_found", f"no route for {req.method} {req.path}"))
+
+    # -- the solve pipeline ----------------------------------------------
+
+    async def _solve(self, req: Request) -> Response:
+        t0 = time.perf_counter()
+        self.counters.enter()
+        try:
+            return await self._admit_and_solve(req, t0)
+        except RpcError as e:
+            if e.status in (429, 504):
+                self.counters.record_shed(e.code)
+            return error_response(e)
+        except Exception as e:   # never leak a raw traceback
+            return error_response(RpcError(
+                500, "internal", f"internal error: {e!r}"))
+        finally:
+            self.counters.exit()
+
+    async def _admit_and_solve(self, req: Request,
+                               t0: float) -> Response:
+        policy = self.policy
+        # 1. validation — typed 4xx before any scheduler state moves.
+        problems, is_batch = parse_solve_payload(
+            req.body, self._dtype, policy)
+        payload_deadline = None
+        if b"deadline_ms" in req.body:
+            try:   # only re-parse when the field can exist
+                payload_deadline = json.loads(req.body).get("deadline_ms")
+            except ValueError:
+                payload_deadline = None
+        # 2. deadline — an already-expired budget is rejected, not solved.
+        budget = deadline_budget_s(req.headers, payload_deadline, policy)
+        # 3. quota — per-tenant token bucket, priced Retry-After.
+        tenant = req.headers.get(TENANT_HEADER, DEFAULT_TENANT)
+        retry = self.quotas.admit(tenant, cost=float(len(problems)))
+        if retry == math.inf:
+            raise RpcError(
+                413, "batch_exceeds_burst",
+                f"{len(problems)} LPs exceeds tenant {tenant!r}'s "
+                "burst allowance; split the batch")
+        if retry > 0.0:
+            raise RpcError(
+                429, "quota_exhausted",
+                f"tenant {tenant!r} is over its rate quota",
+                retry_after_s=retry)
+        # 4. backpressure — shed instead of queueing unboundedly.
+        check_backpressure(self.scheduler, policy)
+        if not self.ready:
+            raise RpcError(503, "not_ready",
+                           "scheduler is not accepting work")
+        # 5. submit — in the executor: an inline size-triggered flush
+        # can block on the max_inflight condition variable, and that
+        # must never stall the event loop.
+        loop = asyncio.get_running_loop()
+        sched = self.scheduler
+
+        def _submit_all():
+            return [sched.submit(A, b, c) for A, b, c in problems]
+
+        try:
+            futures = await loop.run_in_executor(None, _submit_all)
+        except RuntimeError as e:     # closed under our feet
+            raise RpcError(503, "not_ready", str(e))
+        self.counters.record_accepted(len(problems))
+        # 6. await results within the remaining budget; on expiry the
+        # futures are cancelled so still-queued work is dropped at
+        # flush time instead of solved.
+        timeout = None
+        if budget is not None:
+            timeout = budget - (time.perf_counter() - t0)
+            if timeout <= 0.0:
+                for f in futures:
+                    f.cancel()
+                raise RpcError(504, "deadline_exceeded",
+                               "deadline expired before dispatch")
+        gathered = asyncio.gather(
+            *[asyncio.wrap_future(f) for f in futures])
+        try:
+            results = await asyncio.wait_for(gathered, timeout=timeout)
+        except asyncio.TimeoutError:
+            for f in futures:
+                f.cancel()
+            raise RpcError(
+                504, "deadline_exceeded",
+                f"deadline of {budget * 1e3:.0f}ms expired while "
+                "solving")
+        except asyncio.CancelledError:
+            for f in futures:
+                f.cancel()
+            raise
+        except Exception as e:
+            raise RpcError(500, "solve_failed",
+                           f"solve failed: {e!r}")
+        body = [{
+            "x": [float(r.x[0]), float(r.x[1])],
+            "feasible": bool(r.feasible),
+            "objective": float(r.objective),
+            "m": int(r.m),
+            "bucket_m": int(r.bucket_m),
+            "batch_size": int(r.batch_size),
+            "latency_ms": round(r.latency_s * 1e3, 3),
+        } for r in results]
+        if is_batch:
+            return json_response(200, {"results": body, "n": len(body)})
+        return json_response(200, {"result": body[0]})
+
+    # -- observability ----------------------------------------------------
+
+    def _metrics(self) -> Response:
+        snap = self.scheduler.metrics.snapshot(
+            self.scheduler.cache.stats())
+        text = render_metrics(snap, rpc=self.counters.snapshot(),
+                              quotas=self.quotas.snapshot())
+        return Response(200, text.encode("utf-8"),
+                        content_type=CONTENT_TYPE)
+
+
+# -- the HTTP/1.1 byte layer ----------------------------------------------
+
+async def _read_request(reader: asyncio.StreamReader,
+                        body_max: int) -> Optional[Request]:
+    """Parse one request off a keep-alive connection; None on clean
+    EOF; raises RpcError(400/413) on malformed/oversized input."""
+    try:
+        line = await reader.readline()
+    except (ConnectionError, asyncio.LimitOverrunError):
+        return None
+    if not line:
+        return None
+    if len(line) > _MAX_HEADER_LINE:
+        raise RpcError(400, "bad_request", "request line too long")
+    try:
+        method, path, version = line.decode("ascii").split()
+    except ValueError:
+        raise RpcError(400, "bad_request",
+                       f"malformed request line {line!r}")
+    if not version.startswith("HTTP/1."):
+        raise RpcError(400, "bad_request",
+                       f"unsupported protocol {version!r}")
+    headers: Dict[str, str] = {}
+    for _ in range(_MAX_HEADERS):
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        if len(line) > _MAX_HEADER_LINE:
+            raise RpcError(400, "bad_request", "header line too long")
+        name, _, value = line.decode("latin-1").partition(":")
+        headers[name.strip().lower()] = value.strip()
+    else:
+        raise RpcError(400, "bad_request", "too many headers")
+    body = b""
+    if "content-length" in headers:
+        try:
+            n = int(headers["content-length"])
+        except ValueError:
+            raise RpcError(400, "bad_request", "bad Content-Length")
+        if n < 0:
+            raise RpcError(400, "bad_request", "bad Content-Length")
+        if n > body_max:
+            raise RpcError(413, "body_too_large",
+                           f"request body {n}B exceeds {body_max}B")
+        body = await reader.readexactly(n)
+    elif headers.get("transfer-encoding"):
+        raise RpcError(400, "bad_request",
+                       "chunked bodies are not supported; send "
+                       "Content-Length")
+    return Request(method=method.upper(), path=path.split("?", 1)[0],
+                   headers=headers, body=body)
+
+
+class RpcServer:
+    """asyncio TCP server wrapping an :class:`LPFrontend`.
+
+    ``await start()`` binds (``port=0`` picks a free port, re-read from
+    ``self.port``) and starts the frontend; ``await aclose()`` stops
+    accepting, then closes the frontend (final flush + drain).
+    """
+
+    def __init__(self, frontend: LPFrontend, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.frontend = frontend
+        self.host = host
+        self.port = port
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> "RpcServer":
+        self.frontend.start()
+        self._server = await asyncio.start_server(
+            self._on_connection, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def aclose(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        # Scheduler close blocks on drain — keep it off the loop.
+        await asyncio.get_running_loop().run_in_executor(
+            None, self.frontend.close)
+
+    async def _on_connection(self, reader: asyncio.StreamReader,
+                             writer: asyncio.StreamWriter) -> None:
+        body_max = self.frontend.policy.body_max_bytes
+        try:
+            while True:
+                try:
+                    req = await _read_request(reader, body_max)
+                except RpcError as e:
+                    writer.write(error_response(e).encode(close=True))
+                    await writer.drain()
+                    break
+                except (asyncio.IncompleteReadError, ConnectionError):
+                    break
+                if req is None:
+                    break
+                resp = await self.frontend.handle(req)
+                close = (req.headers.get("connection", "").lower()
+                         == "close")
+                writer.write(resp.encode(close=close))
+                await writer.drain()
+                if close:
+                    break
+        except (ConnectionError, asyncio.CancelledError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, RuntimeError):
+                pass
+
+
+def run_in_thread(frontend: LPFrontend, host: str = "127.0.0.1",
+                  port: int = 0) -> Tuple[int, Callable[[], None]]:
+    """Run an :class:`RpcServer` on a daemon thread with its own event
+    loop; returns ``(bound_port, stop)``.  The bench and the
+    real-socket tests use this — production runs ``python -m
+    repro.serve_lp.rpc`` (see ``__main__``)."""
+    started = threading.Event()
+    state: Dict[str, Any] = {}
+
+    async def _main():
+        server = RpcServer(frontend, host, port)
+        await server.start()
+        state["port"] = server.port
+        state["loop"] = asyncio.get_running_loop()
+        state["stop"] = asyncio.Event()
+        started.set()
+        try:
+            await state["stop"].wait()
+        finally:
+            await server.aclose()
+
+    def _run():
+        try:
+            asyncio.run(_main())
+        except Exception as e:   # surface bind errors to the waiter
+            state["error"] = e
+            started.set()
+
+    thread = threading.Thread(target=_run, name="serve-lp-rpc",
+                              daemon=True)
+    thread.start()
+    if not started.wait(timeout=30.0):
+        raise RuntimeError("RPC server failed to start within 30s")
+    if "error" in state:
+        raise state["error"]
+
+    def stop() -> None:
+        state["loop"].call_soon_threadsafe(state["stop"].set)
+        thread.join(timeout=60.0)
+
+    return state["port"], stop
+
+
+# -- one-call construction -------------------------------------------------
+
+def make_frontend(spec=None, *,
+                  max_batch: int = 256,
+                  max_wait_s: float = 0.005,
+                  max_inflight: int = 2,
+                  pipeline: bool = True,
+                  policy: Optional[AdmissionPolicy] = None,
+                  quotas: Optional[QuotaManager] = None,
+                  target_p99_s: Optional[float] = None,
+                  metrics=None) -> LPFrontend:
+    """Build scheduler + admission + quota + SLO in one call — the
+    shared construction path of ``__main__``, the bench's ``--rpc``
+    mode, and tests."""
+    from repro.serve_lp.scheduler import BatchScheduler
+    scheduler = BatchScheduler(
+        spec, max_batch=max_batch, max_wait_s=max_wait_s,
+        max_inflight=max_inflight, pipeline=pipeline, metrics=metrics)
+    slo = (SLOController(target_p99_s)
+           if target_p99_s is not None else None)
+    return LPFrontend(scheduler, policy=policy, quotas=quotas, slo=slo)

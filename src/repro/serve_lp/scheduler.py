@@ -330,6 +330,12 @@ class BatchScheduler:
             queue.Queue()
         self._completer: Optional[threading.Thread] = None
         self._flush_seq = 0
+        # Optional per-bucket (max_batch, max_wait_s) override hook —
+        # installed by the SLO controller so different m-buckets can
+        # run different batching limits (a big-m flush takes longer, so
+        # holding a p99 target means batching it less / flushing it
+        # sooner).  None falls back to the scheduler-wide limits.
+        self._bucket_policy: Optional[Any] = None
 
     # Legacy attribute views (pre-SolverSpec callers/reporting).
     @property
@@ -373,6 +379,58 @@ class BatchScheduler:
         with self._inflight_cv:
             return self._inflight
 
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` has begun (submissions refused)."""
+        with self._lock:
+            return self._closed
+
+    def set_bucket_policy(
+            self, policy: Optional[Any]) -> None:
+        """Install (or clear) a per-bucket limits hook.
+
+        ``policy(bucket_m)`` returns ``(max_batch, max_wait_s)`` for
+        that m-bucket, or ``None`` to fall back to the scheduler-wide
+        limits.  The hook is consulted on the submit path (size
+        trigger) and by the wait-trigger sweep; the timer *tick* still
+        derives from the scheduler-wide ``max_wait_s``, so callers
+        installing shorter per-bucket waits should also lower that
+        (the SLO controller does)."""
+        self._bucket_policy = policy
+
+    def _limits_for(self, bm: int) -> Tuple[int, float]:
+        """Effective (max_batch, max_wait_s) for one bucket: the policy
+        hook when installed and opinionated, else the globals.  A
+        broken policy must never take the serve loop down — it is
+        counted and the globals apply."""
+        policy = self._bucket_policy
+        if policy is not None:
+            try:
+                lim = policy(bm)
+            except Exception as e:
+                self.metrics.record_error(
+                    "bucket_policy",
+                    warn=f"serve_lp: bucket policy failed for "
+                         f"bucket_m={bm} ({e!r}); using scheduler-wide "
+                         "limits")
+                lim = None
+            if lim is not None:
+                mb, mw = lim
+                return max(1, int(mb)), float(mw)
+        return self.max_batch, self.max_wait_s
+
+    def queue_age_s(self, now: Optional[float] = None) -> float:
+        """Age of the oldest queued (not yet flushed) request, seconds;
+        0.0 when every queue is empty.  The RPC admission layer sheds
+        load on this — a growing oldest-age means flushes are not
+        keeping up with arrivals."""
+        if now is None:
+            now = time.perf_counter()
+        with self._lock:
+            oldest = min((q[0].t_submit for q in self._queues.values()
+                          if q), default=None)
+        return 0.0 if oldest is None else max(0.0, now - oldest)
+
     def _pin_for_bucket(self, bm: int, batch: int) -> SolverSpec:
         """The fully shape-resolved spec one bucket's flush runs with:
         explicit spec values win, then the measured tuning table at
@@ -411,7 +469,7 @@ class BatchScheduler:
                 raise RuntimeError("scheduler is closed")
             q = self._queues.setdefault(bm, [])
             q.append(req)
-            if len(q) >= self.max_batch:
+            if len(q) >= self._limits_for(bm)[0]:
                 ready = self._queues.pop(bm)
                 # Reserve the flush in the active count while the pop
                 # is still lock-held, so a concurrent close()'s drain
@@ -473,7 +531,7 @@ class BatchScheduler:
         with self._lock:
             expired = [
                 (bm, q) for bm, q in self._queues.items()
-                if q and now - q[0].t_submit >= self.max_wait_s]
+                if q and now - q[0].t_submit >= self._limits_for(bm)[1]]
             for bm, _ in expired:
                 self._queues.pop(bm)
         first_err: Optional[BaseException] = None
@@ -500,21 +558,34 @@ class BatchScheduler:
 
     def stop(self, *, final_flush: bool = True) -> None:
         """Stop the timer thread, optionally flush the tail, and join
-        every in-flight flush (quiescent on return)."""
+        every in-flight flush (quiescent on return).
+
+        A drain that times out is surfaced (not swallowed): it is
+        counted as a ``drain_timeout`` error in :class:`ServeMetrics`
+        and warned once — callers that need the boolean call
+        :meth:`drain` themselves."""
         if self._thread is not None:
             self._stop.set()
             self._thread.join()
             self._thread = None
         if final_flush:
             self.flush()
-        self.drain()
+        if not self.drain():
+            self.metrics.record_error(
+                "drain_timeout",
+                warn="serve_lp: stop() timed out draining in-flight "
+                     "flushes; some futures may still be pending "
+                     "(counted in ServeMetrics errors)")
 
-    def drain(self, timeout: Optional[float] = 600.0) -> None:
+    def drain(self, timeout: Optional[float] = 600.0) -> bool:
         """Join point: block until every flush in any stage (assemble,
-        dispatch, in flight) has completed or failed."""
+        dispatch, in flight) has completed or failed.  Returns ``True``
+        when fully drained; ``False`` when the timeout expired with
+        flushes still active (never silently — callers that would
+        otherwise treat a timed-out drain as quiescence must check)."""
         with self._inflight_cv:
-            self._inflight_cv.wait_for(lambda: self._active == 0,
-                                       timeout=timeout)
+            return bool(self._inflight_cv.wait_for(
+                lambda: self._active == 0, timeout=timeout))
 
     def __enter__(self) -> "BatchScheduler":
         return self.start()
@@ -560,7 +631,19 @@ class BatchScheduler:
                pre_counted: bool = False) -> None:
         """Flush one bucket: assemble, dispatch and — pipelined — hand
         completion to the worker.  Errors on the assemble/dispatch path
-        reach every future of this flush and re-raise."""
+        reach every future of this flush and re-raise.
+
+        Requests whose future was cancelled while queued (deadline
+        expiry in the RPC layer) are dropped here — expired work is
+        cancelled instead of solved; a flush that cancels down to
+        nothing is skipped entirely."""
+        reqs = [r for r in reqs if not r.future.cancelled()]
+        if not reqs:
+            if pre_counted:
+                with self._inflight_cv:
+                    self._active -= 1
+                    self._inflight_cv.notify_all()
+            return
         if not pre_counted:
             with self._inflight_cv:
                 self._active += 1
@@ -712,9 +795,13 @@ class BatchScheduler:
         now = time.perf_counter()
         # Metrics before the scatter: a caller woken by future.result()
         # observes a fully consistent snapshot (flush counted, buffers
-        # back in the pool, in-flight gauge decremented).
+        # back in the pool, in-flight gauge decremented).  Futures
+        # cancelled after assembly (deadline expiry racing the flush)
+        # are skipped: no one is waiting, and set_result on a cancelled
+        # future would abort the scatter for the rest of the flush.
         for r in unit.reqs:
-            self.metrics.record_latency(now - r.t_submit)
+            if not r.future.done():
+                self.metrics.record_latency(now - r.t_submit)
         self.metrics.record_flush(
             n_real=B, b_pad=unit.b_pad, bucket_m=unit.bucket_m,
             sum_m=sum(r.m for r in unit.reqs),
@@ -722,6 +809,8 @@ class BatchScheduler:
             assemble_seconds=unit.t_dispatch - unit.t_assemble,
             reason=unit.reason)
         for i, r in enumerate(unit.reqs):
+            if r.future.done():
+                continue
             xi = np.asarray(x[i])
             r.future.set_result(LPResult(
                 x=xi,
