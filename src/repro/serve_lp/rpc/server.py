@@ -4,7 +4,7 @@ Two layers, deliberately separable:
 
 * :class:`LPFrontend` — the request handler.  ``await
   frontend.handle(Request)`` runs the whole admission pipeline
-  (validation -> deadline -> quota -> backpressure -> submit -> await
+  (validation -> deadline -> backpressure -> quota -> submit -> await
   futures) and returns a :class:`Response`.  It never touches a
   socket, so tests drive it directly with synthetic requests;
 * :class:`RpcServer` — a minimal HTTP/1.1 server (stdlib ``asyncio``
@@ -235,9 +235,13 @@ class LPFrontend:
             if e.status in (429, 504):
                 self.counters.record_shed(e.code)
             return error_response(e)
-        except Exception as e:   # never leak a raw traceback
+        except Exception as e:   # never leak internals to the wire
+            self.scheduler.metrics.record_error(
+                "rpc_internal",
+                warn=f"serve_lp.rpc: internal error handling a "
+                     f"request ({e!r})")
             return error_response(RpcError(
-                500, "internal", f"internal error: {e!r}"))
+                500, "internal", "internal server error"))
         finally:
             self.counters.exit()
 
@@ -255,7 +259,14 @@ class LPFrontend:
                 payload_deadline = None
         # 2. deadline — an already-expired budget is rejected, not solved.
         budget = deadline_budget_s(req.headers, payload_deadline, policy)
-        # 3. quota — per-tenant token bucket, priced Retry-After.
+        # 3. backpressure — shed instead of queueing unboundedly.
+        # Before quota: a request the server is about to 429/503
+        # anyway must not also cost the tenant tokens.
+        check_backpressure(self.scheduler, policy)
+        if not self.ready:
+            raise RpcError(503, "not_ready",
+                           "scheduler is not accepting work")
+        # 4. quota — per-tenant token bucket, priced Retry-After.
         tenant = req.headers.get(TENANT_HEADER, DEFAULT_TENANT)
         retry = self.quotas.admit(tenant, cost=float(len(problems)))
         if retry == math.inf:
@@ -268,11 +279,6 @@ class LPFrontend:
                 429, "quota_exhausted",
                 f"tenant {tenant!r} is over its rate quota",
                 retry_after_s=retry)
-        # 4. backpressure — shed instead of queueing unboundedly.
-        check_backpressure(self.scheduler, policy)
-        if not self.ready:
-            raise RpcError(503, "not_ready",
-                           "scheduler is not accepting work")
         # 5. submit — in the executor: an inline size-triggered flush
         # can block on the max_inflight condition variable, and that
         # must never stall the event loop.
@@ -314,8 +320,11 @@ class LPFrontend:
                 f.cancel()
             raise
         except Exception as e:
+            self.scheduler.metrics.record_error(
+                "rpc_solve", warn=f"serve_lp.rpc: solve failed ({e!r})")
             raise RpcError(500, "solve_failed",
-                           f"solve failed: {e!r}")
+                           "solve failed; details in server logs and "
+                           "the repro_serve_errors_total counter")
         body = [{
             "x": [float(r.x[0]), float(r.x[1])],
             "feasible": bool(r.feasible),
@@ -348,8 +357,13 @@ async def _read_request(reader: asyncio.StreamReader,
     EOF; raises RpcError(400/413) on malformed/oversized input."""
     try:
         line = await reader.readline()
-    except (ConnectionError, asyncio.LimitOverrunError):
+    except ConnectionError:
         return None
+    except (ValueError, asyncio.LimitOverrunError):
+        # StreamReader.readline reports a line longer than the stream
+        # limit as ValueError — answer 400, don't drop the connection
+        # with an unhandled task exception.
+        raise RpcError(400, "bad_request", "request line too long")
     if not line:
         return None
     if len(line) > _MAX_HEADER_LINE:
@@ -364,7 +378,10 @@ async def _read_request(reader: asyncio.StreamReader,
                        f"unsupported protocol {version!r}")
     headers: Dict[str, str] = {}
     for _ in range(_MAX_HEADERS):
-        line = await reader.readline()
+        try:
+            line = await reader.readline()
+        except (ValueError, asyncio.LimitOverrunError):
+            raise RpcError(400, "bad_request", "header line too long")
         if line in (b"\r\n", b"\n", b""):
             break
         if len(line) > _MAX_HEADER_LINE:

@@ -62,7 +62,7 @@ import dataclasses
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -85,6 +85,35 @@ DEFAULT_SERVE_TILE = 32
 # overlap assembly with an in-flight solve without letting the device
 # queue (and tail latency) grow unboundedly.
 DEFAULT_MAX_INFLIGHT = 2
+
+
+def _try_set_result(fut: Future, value: Any) -> bool:
+    """``fut.set_result(value)``, tolerating a concurrent cancel.
+
+    The RPC layer cancels futures from the asyncio thread on deadline
+    expiry while flush threads settle them; a ``done()`` pre-check only
+    narrows that window.  Losing the race must skip *one* future — an
+    ``InvalidStateError`` escaping here would abort the completion
+    scatter mid-flush and orphan every later future of the flush."""
+    if fut.done():
+        return False
+    try:
+        fut.set_result(value)
+        return True
+    except InvalidStateError:
+        return False
+
+
+def _try_set_exception(fut: Future, exc: BaseException) -> bool:
+    """``fut.set_exception(exc)`` with the same race tolerance as
+    :func:`_try_set_result`."""
+    if fut.done():
+        return False
+    try:
+        fut.set_exception(exc)
+        return True
+    except InvalidStateError:
+        return False
 
 
 class _FlushBufferPool:
@@ -636,8 +665,12 @@ class BatchScheduler:
         Requests whose future was cancelled while queued (deadline
         expiry in the RPC layer) are dropped here — expired work is
         cancelled instead of solved; a flush that cancels down to
-        nothing is skipped entirely."""
-        reqs = [r for r in reqs if not r.future.cancelled()]
+        nothing is skipped entirely.  Surviving futures are *claimed*
+        (``set_running_or_notify_cancel``) so a later ``cancel()`` from
+        another thread returns False instead of racing the completion
+        scatter."""
+        reqs = [r for r in reqs
+                if r.future.set_running_or_notify_cancel()]
         if not reqs:
             if pre_counted:
                 with self._inflight_cv:
@@ -655,8 +688,7 @@ class BatchScheduler:
                 self._active -= 1
                 self._inflight_cv.notify_all()
             for r in reqs:
-                if not r.future.done():
-                    r.future.set_exception(e)
+                _try_set_exception(r.future, e)
             raise
         if not self.pipeline:
             err = self._complete_unit(unit)
@@ -787,18 +819,18 @@ class BatchScheduler:
                     warn=f"serve_lp: {unit.name} failed ({err!r}); its "
                          "futures carry the exception")
             for r in unit.reqs:
-                if not r.future.done():
-                    r.future.set_exception(err)
+                _try_set_exception(r.future, err)
             unit.done.set()
             return err
         B = len(unit.reqs)
         now = time.perf_counter()
         # Metrics before the scatter: a caller woken by future.result()
         # observes a fully consistent snapshot (flush counted, buffers
-        # back in the pool, in-flight gauge decremented).  Futures
-        # cancelled after assembly (deadline expiry racing the flush)
-        # are skipped: no one is waiting, and set_result on a cancelled
-        # future would abort the scatter for the rest of the flush.
+        # back in the pool, in-flight gauge decremented).  The flush's
+        # futures were claimed in _solve, so a concurrent cancel can no
+        # longer settle them — and the scatter below tolerates a lost
+        # settle race anyway rather than orphaning the rest of the
+        # flush.
         for r in unit.reqs:
             if not r.future.done():
                 self.metrics.record_latency(now - r.t_submit)
@@ -812,7 +844,7 @@ class BatchScheduler:
             if r.future.done():
                 continue
             xi = np.asarray(x[i])
-            r.future.set_result(LPResult(
+            _try_set_result(r.future, LPResult(
                 x=xi,
                 feasible=bool(feas[i]),
                 objective=float(r.c @ xi),

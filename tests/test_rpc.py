@@ -12,6 +12,7 @@ import asyncio
 import json
 import math
 import time
+from concurrent.futures import InvalidStateError
 
 import numpy as np
 import pytest
@@ -179,6 +180,41 @@ def test_single_and_batch_solve_bit_identical_to_direct(frontend):
         np.asarray(_body(resp)["result"]["x"], np.float32), want[0].x)
 
 
+def test_internal_errors_do_not_leak_reprs(frontend, monkeypatch):
+    def _boom(*a, **k):
+        raise RuntimeError("secret-internal-detail /opt/private/path")
+
+    monkeypatch.setattr(frontend.quotas, "admit", _boom)
+    resp = _post(frontend, _problem_json(*_lp()))
+    assert resp.status == 500
+    assert _body(resp)["error"]["code"] == "internal"
+    assert "secret-internal-detail" not in resp.body.decode()
+    # the repr lands in the server-side error counter instead
+    assert frontend.scheduler.metrics.errors.get("rpc_internal") == 1
+
+
+def test_oversized_lines_get_400_not_connection_drop():
+    # StreamReader.readline signals over-limit lines as ValueError;
+    # both the request line and header lines must map it to a 400.
+    from repro.serve_lp.rpc.server import _read_request
+
+    def _parse(payload):
+        async def _run():
+            reader = asyncio.StreamReader(limit=1024)
+            reader.feed_data(payload)
+            reader.feed_eof()
+            return await _read_request(reader, body_max=1 << 20)
+        return asyncio.run(_run())
+
+    with pytest.raises(RpcError) as ei:
+        _parse(b"GET /" + b"x" * 4096 + b" HTTP/1.1\r\n\r\n")
+    assert (ei.value.status, ei.value.code) == (400, "bad_request")
+    with pytest.raises(RpcError) as ei:
+        _parse(b"POST /v1/solve HTTP/1.1\r\nx-big: " + b"y" * 4096
+               + b"\r\n\r\n")
+    assert (ei.value.status, ei.value.code) == (400, "bad_request")
+
+
 def test_method_and_route_errors(frontend):
     resp = asyncio.run(frontend.handle(
         Request("GET", "/v1/solve", {})))
@@ -318,6 +354,26 @@ def test_backpressure_sheds_through_handler():
         assert "Retry-After" in resp.headers
         assert f.counters.snapshot()["shed"]["overloaded"] == 1
         assert f.scheduler.pending() == 1   # shed was never queued
+    finally:
+        f.close()
+
+
+def test_shed_request_costs_no_quota_tokens():
+    # Backpressure runs before quota: a 429-shed request must not also
+    # deduct the tenant's token-bucket balance.
+    quotas = QuotaManager(rate=100.0, burst=10.0)
+    f = make_frontend(SPEC, max_batch=4096, max_wait_s=30.0,
+                      policy=AdmissionPolicy(max_queue_age_s=0.0),
+                      quotas=quotas)
+    f.start()
+    try:
+        f.scheduler.submit(*_lp())
+        time.sleep(0.01)
+        resp = _post(f, _problem_json(*_lp()), {"X-Tenant": "t1"})
+        assert resp.status == 429
+        snap = quotas.snapshot()
+        assert "t1" not in snap or (snap["t1"]["admitted"] == 0
+                                    and snap["t1"]["rejected"] == 0)
     finally:
         f.close()
 
@@ -485,6 +541,44 @@ def test_cancelled_future_skipped_at_scatter():
         assert f2.result(timeout=60).feasible
         assert f1.cancelled()
         assert not sched.metrics.errors
+
+
+def test_flush_claims_futures_so_cancel_cannot_race_completion():
+    # Once a flush picks a request up, the deadline machinery's
+    # cancel() must lose cleanly (return False) instead of racing the
+    # completion scatter into InvalidStateError.
+    sched = BatchScheduler(SPEC, max_batch=2, max_wait_s=10.0)
+    sched.cache = ExecutableCache(lambda spec: _SlowExec(0.3))
+    try:
+        f1 = sched.submit(*_lp(seed=1))
+        f2 = sched.submit(*_lp(seed=2))   # size flush: both claimed
+        assert f1.cancel() is False       # too late — the flush owns it
+        assert f1.result(timeout=30) is not None
+        assert f2.result(timeout=30) is not None
+        assert not sched.metrics.errors
+    finally:
+        sched.close()
+
+
+class _RacedFuture:
+    """done() still says pending, but a cross-thread cancel already
+    won — the window the done() pre-check cannot close."""
+
+    def done(self):
+        return False
+
+    def set_result(self, value):
+        raise InvalidStateError("cancelled")
+
+    def set_exception(self, exc):
+        raise InvalidStateError("cancelled")
+
+
+def test_settle_tolerates_lost_cancel_race():
+    from repro.serve_lp.scheduler import (_try_set_exception,
+                                          _try_set_result)
+    assert _try_set_result(_RacedFuture(), 1) is False
+    assert _try_set_exception(_RacedFuture(), ValueError("x")) is False
 
 
 # -- real-socket smoke -----------------------------------------------------
