@@ -3,12 +3,33 @@
 Emits one CSV row per traffic profile: us_per_call is mean end-to-end
 request latency; derived packs throughput / p99 / padding / cache-hit
 numbers.
+
+The ``serve_shard_*`` profiles A/B the mesh (shard_map, uneven shards,
+cross-bucket fusing) and legacy pmap flush paths on an
+underfull-heterogeneous burst, and additionally print one ``JSON``
+line each with launch counts, pad-waste fractions and the per-device
+row totals.  Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to see the
+multi-device layouts on a CPU host.
 """
 from __future__ import annotations
+
+import json
 
 from benchmarks.common import emit
 from repro.serve_lp.bench import (BenchConfig, run_rpc_traffic,
                                   run_traffic, smoke_config)
+
+
+def _shard_profile(sharding: str) -> BenchConfig:
+    """Underfull-heterogeneous burst: requests spread over the full
+    m-bucket ladder, so per-bucket occupancy stays well below
+    max_batch and the fused/uneven machinery has real work to do."""
+    cfg = BenchConfig(requests=240, rate=2000.0, m_min=8, m_max=1024,
+                      max_batch=32, max_wait_s=0.005, check=8)
+    cfg.open_loop = True
+    cfg.sharding = sharding
+    return cfg
 
 
 def run(full: bool = False) -> None:
@@ -30,8 +51,31 @@ def run(full: bool = False) -> None:
         profiles["serve_kernel"] = BenchConfig(
             requests=256, rate=2000.0, m_max=256, max_batch=64,
             method="kernel", check=4)
+    # Mesh vs pmap flush-path A/B (same traffic, same seed): the mesh
+    # path fuses underfull buckets into shared launches over only the
+    # devices it needs, so it should show strictly fewer launches and
+    # at-least-pmap throughput.
+    profiles["serve_shard_mesh"] = _shard_profile("mesh")
+    profiles["serve_shard_pmap"] = _shard_profile("pmap")
+    shard_rows = {}
     for name, cfg in profiles.items():
         snap, _ = run_traffic(cfg, quiet=True)
+        if name.startswith("serve_shard_"):
+            row = {
+                "profile": name,
+                "sharding": cfg.sharding,
+                "throughput_lps": round(snap["throughput_lps"], 1),
+                "launches": snap["launches_total"],
+                "flushes": snap["n_flushes"],
+                "fused_flushes": snap["fused_flushes"],
+                "fused_buckets": snap["fused_buckets"],
+                "pad_waste_problems": round(
+                    snap["padding_waste_problems"], 4),
+                "pad_waste_cells": round(snap["padding_waste_cells"], 4),
+                "rows_per_device": snap["rows_per_device"],
+            }
+            shard_rows[cfg.sharding] = row
+            print("JSON " + json.dumps(row), flush=True)
         emit(name, snap["latency_mean_ms"] / 1e3,
              f"lps={snap['throughput_lps']:.1f}"
              f"|p50ms={snap['latency_p50_ms']:.2f}"
@@ -40,7 +84,15 @@ def run(full: bool = False) -> None:
              f"|cache_hit={snap['cache']['hit_rate']:.3f}"
              f"|inflight_max={snap['inflight_max']}"
              f"|overlapped={snap['overlapped_dispatches']}"
-             f"|idle_s={snap['device_idle_s_est']:.3f}")
+             f"|idle_s={snap['device_idle_s_est']:.3f}"
+             f"|launches={snap['launches_total']}"
+             f"|fused={snap['fused_flushes']}")
+    if len(shard_rows) == 2:
+        mesh, pmap = shard_rows["mesh"], shard_rows["pmap"]
+        print(f"[serve_bench] shard A/B: mesh {mesh['launches']} "
+              f"launches @ {mesh['throughput_lps']:.1f} LPs/s vs pmap "
+              f"{pmap['launches']} launches @ "
+              f"{pmap['throughput_lps']:.1f} LPs/s", flush=True)
     # Same smoke traffic through the HTTP front end: what the network
     # layer (parse + admission + loop hop) adds over in-process submit,
     # plus the overload-phase shed rate.

@@ -28,6 +28,17 @@ if [[ -n "${SERVE_HOST_DEVICES:-}" ]]; then
     export XLA_FLAGS="--xla_force_host_platform_device_count=${SERVE_HOST_DEVICES} ${XLA_FLAGS:-}"
 fi
 
+# Multi-host seam: set SERVE_COORDINATOR (host:port of process 0) plus
+# SERVE_NUM_PROCESSES / SERVE_PROCESS_ID to join a multi-host serving
+# fleet — the module calls jax.distributed.initialize before touching
+# devices, after which flush layouts can span hosts via the reserved
+# "hosts" mesh axis (see repro/serve_lp/mesh_layout.py).  Unset on
+# single-host launches; nothing else changes.
+if [[ -n "${SERVE_COORDINATOR:-}" ]]; then
+    : "${SERVE_NUM_PROCESSES:?SERVE_COORDINATOR set but SERVE_NUM_PROCESSES missing}"
+    : "${SERVE_PROCESS_ID:?SERVE_COORDINATOR set but SERVE_PROCESS_ID missing}"
+fi
+
 # x64 policy: allow fp64 specs (`--method` + float64 dtype) without
 # forcing every default array to fp64.
 export JAX_ENABLE_X64="${JAX_ENABLE_X64:-1}"

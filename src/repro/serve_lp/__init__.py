@@ -6,10 +6,14 @@ scheduler aggregates them into shape-bucketed super-batches, solves each
 flush through a cached executable (sharded across devices when more than
 one is visible) and scatters results to the futures in submission order.
 
-    scheduler (submit/flush policy, pipelined dispatch + completion)
+    scheduler (submit/flush policy, pipelined dispatch + completion,
+               cross-bucket fused flush units)
         -> buckets (shape ladder + executable cache)
-        -> sharding (dispatch/complete Executables; pmap across
-           jax.devices(), single-device jit fallback)
+        -> mesh_layout (MeshLayout planner: uneven per-device shards,
+           grouped launches, planner-owned padding)
+        -> sharding (dispatch/complete Executables; shard_map over the
+           planned mesh, single-device jit fallback, legacy pmap
+           escape hatch)
         -> futures (per-request LPResult)
 
 The serve loop is pipelined by default: flush dispatch is asynchronous
@@ -26,8 +30,11 @@ already hold one uniform batch.  The scheduler takes the same spec —
 ``BatchScheduler(SolverSpec(...))`` — and embeds it in every flush's
 :class:`ExecSpec` cache key.
 """
-from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
+from repro.serve_lp.buckets import (SHARDING_MODES, ExecSpec,
+                                    ExecutableCache, bucket_batch,
                                     bucket_m, shape_ladder)
+from repro.serve_lp.mesh_layout import (LaunchGroup, MeshLayout, make_mesh,
+                                        plan_layout)
 from repro.serve_lp.metrics import ServeMetrics
 from repro.serve_lp.scheduler import BatchScheduler, LPResult
 from repro.serve_lp.sharding import (Executable, as_executable,
@@ -36,6 +43,8 @@ from repro.solver import SolverSpec
 
 __all__ = [
     "BatchScheduler", "Executable", "ExecSpec", "ExecutableCache",
-    "LPResult", "ServeMetrics", "SolverSpec", "as_executable",
-    "bucket_batch", "bucket_m", "build_executable", "shape_ladder",
+    "LPResult", "LaunchGroup", "MeshLayout", "SHARDING_MODES",
+    "ServeMetrics", "SolverSpec", "as_executable", "bucket_batch",
+    "bucket_m", "build_executable", "make_mesh", "plan_layout",
+    "shape_ladder",
 ]

@@ -15,6 +15,12 @@ assembles the next one — ``--assert-overlap`` turns that claim into a
 hard check (used by CI).  ``--no-pipeline`` runs the same traffic
 through the stop-and-go loop for an A/B of the overlap win.
 
+``--sharding {mesh,pmap}`` picks the flush executable path (mesh is the
+default: shard_map launches with uneven per-device shards and
+cross-bucket fusing; pmap is the legacy escape hatch), and
+``--assert-fused`` turns "underfull buckets actually fused into shared
+launches" into a hard check (used by CI).
+
     python -m repro.serve_lp.bench --smoke
     python -m repro.serve_lp.bench --smoke --open-loop --assert-overlap
     python -m repro.serve_lp.bench --requests 2000 --rate 5000 \
@@ -55,6 +61,8 @@ class BenchConfig:
     max_inflight: int = 2         # dispatch backpressure bound
     open_loop: bool = False       # saturating burst: ignore `rate`
     assert_overlap: bool = False  # require >=2 flushes seen in flight
+    sharding: str = "mesh"        # flush executable path: mesh | pmap
+    assert_fused: bool = False    # require >=1 cross-bucket fused flush
     # --rpc mode: drive the HTTP front end instead of in-process submit
     rpc: bool = False
     rpc_clients: int = 8          # closed-loop client threads
@@ -162,7 +170,8 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
     sched = BatchScheduler(spec, max_batch=cfg.max_batch,
                            max_wait_s=cfg.max_wait_s,
                            pipeline=cfg.pipeline,
-                           max_inflight=cfg.max_inflight)
+                           max_inflight=cfg.max_inflight,
+                           sharding=cfg.sharding)
     if cfg.warmup:
         _warmup(cfg, sched, quiet)
     futures: List = []
@@ -208,6 +217,19 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
                   f"{snap['inflight_max']}, "
                   f"{snap['overlapped_dispatches']} overlapped "
                   "dispatches")
+    if cfg.assert_fused:
+        assert cfg.sharding == "mesh", "--assert-fused needs mesh sharding"
+        assert snap["fused_flushes"] >= 1, (
+            "no flush ever fused multiple buckets "
+            f"(fused_flushes={snap['fused_flushes']}); underfull "
+            "buckets were launched separately")
+        assert snap["fused_buckets"] >= 2, (
+            f"fused flushes covered only {snap['fused_buckets']} "
+            "buckets")
+        if not quiet:
+            print(f"[serve_lp.bench] fusing ok: {snap['fused_flushes']} "
+                  f"fused flushes covering {snap['fused_buckets']} "
+                  "buckets")
     return snap, sched
 
 
@@ -491,6 +513,14 @@ def main(argv=None) -> None:
                     help="saturating burst: submit with no rate throttle")
     ap.add_argument("--assert-overlap", action="store_true",
                     help="fail unless >=2 flushes were in flight at once")
+    ap.add_argument("--sharding", default="mesh",
+                    choices=("mesh", "pmap"),
+                    help="flush executable path: mesh (shard_map, "
+                         "uneven shards, cross-bucket fusing) or the "
+                         "legacy pmap escape hatch")
+    ap.add_argument("--assert-fused", action="store_true",
+                    help="fail unless >=1 flush fused multiple "
+                         "m-buckets into one launch (mesh only)")
     ap.add_argument("--rpc", action="store_true",
                     help="drive the HTTP front end (closed-loop latency "
                          "phase + open-loop overload phase + /metrics "
@@ -525,6 +555,8 @@ def main(argv=None) -> None:
     cfg.max_inflight = args.max_inflight
     cfg.open_loop = args.open_loop
     cfg.assert_overlap = args.assert_overlap
+    cfg.sharding = args.sharding
+    cfg.assert_fused = args.assert_fused
     cfg.rpc = args.rpc
     cfg.rpc_clients = args.rpc_clients
     cfg.rpc_burst = args.rpc_burst

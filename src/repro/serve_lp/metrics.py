@@ -60,6 +60,14 @@ class ServeMetrics:
         self.n_solved = 0
         self.n_flushes = 0
         self.flush_reasons: Dict[str, int] = {}
+        # Sharding/fusing observability: total device launches (a mesh
+        # flush may group into 1-2 sub-mesh launches; pmap/jit is 1),
+        # fused multi-bucket flush units, how many m-buckets those
+        # folded together, and packed rows dispatched per device index.
+        self.launches = 0
+        self.fused_flushes = 0
+        self.fused_buckets = 0
+        self.rows_by_device: List[int] = []
         self.problems_real = 0
         self.problems_padded = 0
         self.cells_valid = 0
@@ -152,11 +160,21 @@ class ServeMetrics:
 
     def record_flush(self, *, n_real: int, b_pad: int, bucket_m: int,
                      sum_m: int, solve_seconds: float,
-                     reason: str, assemble_seconds: float = 0.0) -> None:
+                     reason: str, assemble_seconds: float = 0.0,
+                     n_buckets: int = 1, launches: int = 1,
+                     shards: tuple = ()) -> None:
         with self._lock:
             self.n_flushes += 1
             self.flush_reasons[reason] = (
                 self.flush_reasons.get(reason, 0) + 1)
+            self.launches += launches
+            if n_buckets > 1:
+                self.fused_flushes += 1
+                self.fused_buckets += n_buckets
+            for i, rows in enumerate(shards):
+                while len(self.rows_by_device) <= i:
+                    self.rows_by_device.append(0)
+                self.rows_by_device[i] += int(rows)
             self.n_solved += n_real
             self.problems_real += n_real
             self.problems_padded += b_pad - n_real
@@ -199,6 +217,10 @@ class ServeMetrics:
                 "n_solved": self.n_solved,
                 "n_flushes": self.n_flushes,
                 "flush_reasons": dict(self.flush_reasons),
+                "launches_total": self.launches,
+                "fused_flushes": self.fused_flushes,
+                "fused_buckets": self.fused_buckets,
+                "rows_per_device": list(self.rows_by_device),
                 "elapsed_s": elapsed,
                 "throughput_lps": (self.n_solved / elapsed
                                    if elapsed > 0 else 0.0),
@@ -250,6 +272,11 @@ class ServeMetrics:
             "flushes by trigger: " + (", ".join(
                 f"{k}={v}" for k, v in
                 sorted(s['flush_reasons'].items())) or "none"),
+            f"sharding: {s['launches_total']} launches / "
+            f"{s['n_flushes']} flushes, fused {s['fused_flushes']} "
+            f"units covering {s['fused_buckets']} buckets, rows/device "
+            + (str(s["rows_per_device"]) if s["rows_per_device"]
+               else "[]"),
         ]
         if s["errors"]:
             lines.append("errors: " + ", ".join(

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import os
 
 from repro.serve_lp.rpc.admission import AdmissionPolicy
 from repro.serve_lp.rpc.quota import QuotaManager
@@ -15,7 +16,30 @@ from repro.serve_lp.rpc.server import RpcServer, make_frontend
 from repro.solver import SolverSpec
 
 
+def _maybe_init_distributed() -> None:
+    """Multi-host seam: when ``SERVE_COORDINATOR`` is set, join the
+    multi-process JAX runtime before any device query.
+
+    This is where multi-host serving plugs into the MeshLayout planner
+    (``serve_lp.mesh_layout``): after ``jax.distributed.initialize``,
+    ``jax.devices()`` spans every host and future layouts gain the
+    reserved ``hosts`` mesh axis.  Single-host launches (no env) skip
+    this entirely.  Companion envs: ``SERVE_NUM_PROCESSES`` and
+    ``SERVE_PROCESS_ID``.
+    """
+    coordinator = os.environ.get("SERVE_COORDINATOR")
+    if not coordinator:
+        return
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=int(os.environ["SERVE_NUM_PROCESSES"]),
+        process_id=int(os.environ["SERVE_PROCESS_ID"]))
+
+
 def main(argv=None) -> None:
+    _maybe_init_distributed()
     ap = argparse.ArgumentParser(
         prog="python -m repro.serve_lp.rpc",
         description="HTTP front end for the batched 2-D LP solver")

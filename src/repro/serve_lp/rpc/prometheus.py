@@ -64,12 +64,15 @@ class _Writer:
 def render_metrics(snapshot: Dict, *,
                    rpc: Optional[Dict] = None,
                    quotas: Optional[Dict] = None,
+                   slo: Optional[Dict] = None,
                    prefix: str = "repro_serve") -> str:
     """The full scrape body: scheduler snapshot + RPC counters.
 
     ``snapshot`` is ``ServeMetrics.snapshot(cache_stats)``; ``rpc`` is
     :meth:`~repro.serve_lp.rpc.server.RpcCounters.snapshot`; ``quotas``
-    is :meth:`~repro.serve_lp.rpc.quota.QuotaManager.snapshot`.
+    is :meth:`~repro.serve_lp.rpc.quota.QuotaManager.snapshot`;
+    ``slo`` is :meth:`~repro.serve_lp.rpc.slo.SLOController.plans`
+    (``{bucket_m: BucketPlan}``).
     """
     w = _Writer(prefix)
 
@@ -112,6 +115,21 @@ def render_metrics(snapshot: Dict, *,
     w.scalar("latency_seconds_count", "counter",
              "Latency samples offered to the reservoir",
              snapshot["latency_seen"])
+    w.scalar("launches_total", "counter",
+             "Device launches issued (a mesh flush may group into "
+             "1-2 sub-mesh launches)",
+             snapshot.get("launches_total", 0))
+    w.scalar("fused_flushes_total", "counter",
+             "Fused multi-bucket flush units dispatched",
+             snapshot.get("fused_flushes", 0))
+    w.scalar("fused_buckets_total", "counter",
+             "m-buckets folded into fused flush units",
+             snapshot.get("fused_buckets", 0))
+    w.family("device_rows_total", "counter",
+             "Packed problem rows dispatched per device index",
+             [({"device": str(i)}, v) for i, v in
+              enumerate(snapshot.get("rows_per_device", []))]
+             or [({}, 0)])
     w.scalar("padding_waste_problems_ratio", "gauge",
              "Fraction of solved problem slots that were padding",
              snapshot["padding_waste_problems"])
@@ -150,6 +168,29 @@ def render_metrics(snapshot: Dict, *,
         w.scalar("rpc_lps_accepted_total", "counter",
                  "LPs admitted past admission control",
                  rpc["lps_accepted"])
+    # -- SLO plane: the controller's installed per-bucket plans ----------
+    if slo is not None:
+        plans = sorted(slo.items())
+        w.family("slo_bucket_max_batch", "gauge",
+                 "SLO-planned size trigger per m-bucket",
+                 [({"bucket_m": str(bm), "source": p.source},
+                   p.max_batch) for bm, p in plans] or [({}, 0)])
+        w.family("slo_bucket_max_wait_seconds", "gauge",
+                 "SLO-planned wait trigger per m-bucket",
+                 [({"bucket_m": str(bm), "source": p.source},
+                   p.max_wait_s) for bm, p in plans] or [({}, 0)])
+        w.family("slo_bucket_est_flush_seconds", "gauge",
+                 "Estimated flush service time per m-bucket (0 when "
+                 "no measured tuning entry)",
+                 [({"bucket_m": str(bm), "source": p.source},
+                   p.est_flush_s or 0.0) for bm, p in plans]
+                 or [({}, 0)])
+        w.family("slo_bucket_allow_fuse", "gauge",
+                 "Fused-flush policy per m-bucket (1 = may join "
+                 "cross-bucket fused flush units)",
+                 [({"bucket_m": str(bm), "source": p.source},
+                   1 if p.allow_fuse else 0) for bm, p in plans]
+                 or [({}, 0)])
     if quotas is not None:
         w.family("rpc_quota_admitted_total", "counter",
                  "LPs admitted by the per-tenant token bucket",

@@ -343,8 +343,10 @@ class LPFrontend:
     def _metrics(self) -> Response:
         snap = self.scheduler.metrics.snapshot(
             self.scheduler.cache.stats())
-        text = render_metrics(snap, rpc=self.counters.snapshot(),
-                              quotas=self.quotas.snapshot())
+        text = render_metrics(
+            snap, rpc=self.counters.snapshot(),
+            quotas=self.quotas.snapshot(),
+            slo=self.slo.plans() if self.slo is not None else None)
         return Response(200, text.encode("utf-8"),
                         content_type=CONTENT_TYPE)
 

@@ -49,13 +49,20 @@ MAX_WAIT_FRACTION = 0.5
 
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:
-    """The derived batching limits for one m-bucket."""
+    """The derived batching limits for one m-bucket.
+
+    ``allow_fuse`` is the fused-flush policy: whether this bucket may
+    be folded into a cross-bucket fused flush unit.  Fusing solves the
+    bucket's requests at a *larger* ``m_pad`` (the biggest member's),
+    so the controller vetoes it when the measured timing at the next
+    ladder rung would blow the flush-service budget."""
 
     bucket_m: int
     max_batch: int
     max_wait_s: float
     est_flush_s: Optional[float]   # None when no measured entry
     source: str                    # "measured" | "default"
+    allow_fuse: bool = True
 
 
 class SLOController:
@@ -143,12 +150,18 @@ class SLOController:
         if us is None:
             return None
         n_dev = max(1, scheduler.n_devices)
-        unit = (spec.tile or 1) * n_dev
+        tile = spec.tile or 1
+        unit = scheduler._unit_for_tile(tile)
 
         def est_flush_s(batch: int) -> float:
             # One flush solves b_pad (batch rounded up the padding
-            # ladder) problems split across n_dev devices.
-            return us * bucket_batch(batch, unit) * 1e-6 / n_dev
+            # ladder) problems split across the devices the layout
+            # actually uses — under mesh sharding an underfull flush
+            # occupies fewer than n_dev devices, so its service time
+            # does not shrink with devices it never touched.
+            b_pad = bucket_batch(batch, unit)
+            used = max(1, min(n_dev, -(-b_pad // tile)))
+            return us * b_pad * 1e-6 / used
 
         target = self.target_p99_s
         max_batch = scheduler.max_batch
@@ -158,9 +171,24 @@ class SLOController:
         est = est_flush_s(max_batch)
         wait = target - 2.0 * est
         wait = min(max(wait, MIN_WAIT_S), MAX_WAIT_FRACTION * target)
+        # Fused-flush policy: fusing solves this bucket at a larger
+        # m_pad.  If the next ladder rung has a measured timing and a
+        # same-size flush there would blow the service budget, keep the
+        # bucket out of fused units; an unmeasured rung stays fusable
+        # (the scheduler's fuse_max_m_ratio still bounds the blowup).
+        allow_fuse = True
+        spec2 = scheduler.spec.resolve_for_shape(2 * bm,
+                                                 scheduler.max_batch)
+        us2 = self._measured_us_per_lp(spec2, 2 * bm, scheduler.max_batch)
+        if us2 is not None:
+            tile2 = spec2.tile or 1
+            b2 = bucket_batch(max_batch, scheduler._unit_for_tile(tile2))
+            used2 = max(1, min(n_dev, -(-b2 // tile2)))
+            est2 = us2 * b2 * 1e-6 / used2
+            allow_fuse = est2 <= self.service_fraction * target
         return BucketPlan(bucket_m=bm, max_batch=max_batch,
                           max_wait_s=wait, est_flush_s=est,
-                          source="measured")
+                          source="measured", allow_fuse=allow_fuse)
 
     # -- wiring -----------------------------------------------------------
 
@@ -183,7 +211,7 @@ class SLOController:
 
         def policy(bm: int):
             plan = self.plan_for(scheduler, bm)
-            return plan.max_batch, plan.max_wait_s
+            return plan.max_batch, plan.max_wait_s, plan.allow_fuse
 
         scheduler.set_bucket_policy(policy)
 

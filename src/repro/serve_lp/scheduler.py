@@ -37,6 +37,23 @@ one blocking call —
 back-to-back on the flushing thread), which is still what you want for
 strictly step-synchronous callers that flush and immediately wait.
 
+Flushes shard over devices per the scheduler's ``sharding`` mode:
+``"mesh"`` (default) plans a
+:class:`~repro.serve_lp.mesh_layout.MeshLayout` per flush — uneven
+per-device shards, planner-owned padding (the batch ladder unit is one
+kernel ``tile``, not ``tile * n_devices``) and grouped ``shard_map``
+launches; ``"pmap"`` is the legacy even-split escape hatch.  Mesh mode
+also enables **cross-bucket fusing** (``fuse=True``): buckets whose
+queues are individually under the size trigger but jointly fill a
+launch are drained into one *fused flush unit* — their requests packed
+into a single super-batch padded to the largest member's ``m_pad``
+(still a ladder value, so fused flushes reuse the same cached
+executables), solved in one launch, and scattered back to each
+request's own future.  Fusing fires on the submit path (joint-fill
+trigger, reason ``"fused"``), in the wait-trigger sweep, and on manual
+:meth:`flush`; the SLO controller can veto it per bucket via the
+3-tuple bucket-policy form.
+
 Failure discipline: a solve failure reaches every future of *its own*
 flush via ``set_exception`` and never orphans another bucket — manual
 and expired flushes isolate per-bucket errors and re-raise the first
@@ -70,8 +87,8 @@ import numpy as np
 
 from repro.core.lp import PAD_B
 from repro.kernels.batch_lp import LANE
-from repro.serve_lp.buckets import (ExecSpec, ExecutableCache, bucket_batch,
-                                    bucket_m)
+from repro.serve_lp.buckets import (SHARDING_MODES, ExecSpec,
+                                    ExecutableCache, bucket_batch, bucket_m)
 from repro.serve_lp.metrics import ServeMetrics
 from repro.serve_lp.sharding import as_executable, build_executable
 from repro.solver import SolverSpec
@@ -226,6 +243,7 @@ class _InflightFlush:
     buf_key: tuple               # pool lease (returned at completion)
     bufs: tuple                  # (L, c, mv) host arrays
     t_assemble: float            # assembly start
+    n_buckets: int = 1           # m-buckets fused into this unit
     t_dispatch: float = 0.0      # dispatch enqueued (device handed work)
     t_complete: float = 0.0      # device results materialized on host
     handle: Any = None           # in-flight device result handle
@@ -268,6 +286,18 @@ class BatchScheduler:
         flushes are already in flight (pipelined mode only).
     devices:
         device list to shard flushes over; default ``jax.devices()``.
+    sharding:
+        flush-sharding mode — ``"mesh"`` (MeshLayout planner +
+        shard_map; uneven shards, planner-owned padding) or ``"pmap"``
+        (legacy even-split escape hatch, kept one release).
+    fuse:
+        enable cross-bucket fused flush units.  Defaults to ``True``
+        under mesh sharding and ``False`` under pmap (whose fixed
+        even-split geometry predates fused units).
+    fuse_max_m_ratio:
+        never fuse buckets whose ``m_pad`` differ by more than this
+        factor — fusing an m=8 bucket into an m=4096 flush would burn
+        more pad cells than the saved launch is worth.
     """
 
     def __init__(
@@ -286,11 +316,20 @@ class BatchScheduler:
         max_inflight: int = DEFAULT_MAX_INFLIGHT,
         devices: Optional[Sequence] = None,
         metrics: Optional[ServeMetrics] = None,
+        sharding: str = "mesh",
+        fuse: Optional[bool] = None,
+        fuse_max_m_ratio: float = 8.0,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} < 1")
         if max_inflight < 1:
             raise ValueError(f"max_inflight={max_inflight} < 1")
+        if sharding not in SHARDING_MODES:
+            raise ValueError(
+                f"sharding={sharding!r} not in {SHARDING_MODES}")
+        if fuse_max_m_ratio < 1:
+            raise ValueError(
+                f"fuse_max_m_ratio={fuse_max_m_ratio} < 1")
         legacy = {k: v for k, v in dict(
             backend=method, tile=tile, chunk=chunk, M=M,
             normalize=normalize, interpret=interpret).items()
@@ -329,6 +368,9 @@ class BatchScheduler:
         self.max_wait_s = max_wait_s
         self.pipeline = bool(pipeline)
         self.max_inflight = max_inflight
+        self.sharding = sharding
+        self.fuse = (sharding == "mesh") if fuse is None else bool(fuse)
+        self.fuse_max_m_ratio = float(fuse_max_m_ratio)
         # Only the Pallas kernel needs LANE-multiple constraint counts;
         # the dense solvers bucket on a finer ladder so tiny LPs are not
         # padded 16x (crowd_sim submits m=8).
@@ -398,9 +440,17 @@ class BatchScheduler:
 
     @property
     def batch_unit(self) -> int:
-        """Fallback flush-padding unit (tile per device).  Buckets whose
-        pinned tile differs (tuned entries) pad on their own unit."""
-        return self.tile * len(self._devices)
+        """Fallback flush-padding unit.  Mesh sharding pads to whole
+        kernel tiles only (the MeshLayout planner owns the per-device
+        distribution); legacy pmap needs a whole tile per device.
+        Buckets whose pinned tile differs (tuned entries) pad on their
+        own unit."""
+        return self._unit_for_tile(self.tile)
+
+    def _unit_for_tile(self, tile: int) -> int:
+        if self.sharding == "pmap":
+            return tile * len(self._devices)
+        return tile
 
     @property
     def inflight(self) -> int:
@@ -418,35 +468,51 @@ class BatchScheduler:
             self, policy: Optional[Any]) -> None:
         """Install (or clear) a per-bucket limits hook.
 
-        ``policy(bucket_m)`` returns ``(max_batch, max_wait_s)`` for
-        that m-bucket, or ``None`` to fall back to the scheduler-wide
-        limits.  The hook is consulted on the submit path (size
-        trigger) and by the wait-trigger sweep; the timer *tick* still
+        ``policy(bucket_m)`` returns ``(max_batch, max_wait_s)`` or
+        ``(max_batch, max_wait_s, allow_fuse)`` for that m-bucket, or
+        ``None`` to fall back to the scheduler-wide limits.  The hook
+        is consulted on the submit path (size trigger), by the
+        wait-trigger sweep, and — via the optional third element — by
+        the cross-bucket fuse planner (``allow_fuse=False`` keeps the
+        bucket out of fused flush units).  The timer *tick* still
         derives from the scheduler-wide ``max_wait_s``, so callers
         installing shorter per-bucket waits should also lower that
         (the SLO controller does)."""
         self._bucket_policy = policy
 
+    def _policy_for(self, bm: int) -> Optional[tuple]:
+        """The raw policy tuple for one bucket, or None.  A broken
+        policy must never take the serve loop down — it is counted and
+        the globals apply."""
+        policy = self._bucket_policy
+        if policy is None:
+            return None
+        try:
+            return policy(bm)
+        except Exception as e:
+            self.metrics.record_error(
+                "bucket_policy",
+                warn=f"serve_lp: bucket policy failed for "
+                     f"bucket_m={bm} ({e!r}); using scheduler-wide "
+                     "limits")
+            return None
+
     def _limits_for(self, bm: int) -> Tuple[int, float]:
         """Effective (max_batch, max_wait_s) for one bucket: the policy
-        hook when installed and opinionated, else the globals.  A
-        broken policy must never take the serve loop down — it is
-        counted and the globals apply."""
-        policy = self._bucket_policy
-        if policy is not None:
-            try:
-                lim = policy(bm)
-            except Exception as e:
-                self.metrics.record_error(
-                    "bucket_policy",
-                    warn=f"serve_lp: bucket policy failed for "
-                         f"bucket_m={bm} ({e!r}); using scheduler-wide "
-                         "limits")
-                lim = None
-            if lim is not None:
-                mb, mw = lim
-                return max(1, int(mb)), float(mw)
+        hook when installed and opinionated, else the globals."""
+        lim = self._policy_for(bm)
+        if lim is not None:
+            mb, mw = lim[0], lim[1]
+            return max(1, int(mb)), float(mw)
         return self.max_batch, self.max_wait_s
+
+    def _fuse_ok(self, bm: int) -> bool:
+        """Whether the bucket policy allows this bucket in fused flush
+        units (the optional third policy element; default yes)."""
+        lim = self._policy_for(bm)
+        if lim is None or len(lim) < 3:
+            return True
+        return bool(lim[2])
 
     def queue_age_s(self, now: Optional[float] = None) -> float:
         """Age of the oldest queued (not yet flushed) request, seconds;
@@ -488,6 +554,7 @@ class BatchScheduler:
         bm = bucket_m(m, base=self.bucket_base)
         self.metrics.touch_clock()
         ready = None
+        fused = None
         with self._lock:
             # Closed-ness is decided under the same lock close() takes
             # *before* its final flush: a submit either loses the race
@@ -505,9 +572,52 @@ class BatchScheduler:
                 # cannot slip between pop and dispatch and miss it.
                 with self._inflight_cv:
                     self._active += 1
+            elif self.fuse:
+                fused = self._pop_fused_locked()
+                if fused is not None:
+                    with self._inflight_cv:
+                        self._active += 1
         if ready is not None:
             self._solve(bm, ready, reason="size", pre_counted=True)
+        elif fused is not None:
+            self._solve_unit(fused, reason="fused", pre_counted=True)
         return fut
+
+    def _pop_fused_locked(self) -> Optional[List[Tuple[int, list]]]:
+        """Joint-fill fuse trigger (call with ``_lock`` held): when
+        several buckets are each under their size trigger but together
+        fill a launch, pop them as one fused flush unit.
+
+        Returns the popped ``[(bucket_m, reqs), ...]`` parts, or None
+        when no fusable group of >= 2 buckets reaches ``max_batch``
+        rows.  Grouping mirrors :meth:`_plan_units`: buckets sorted by
+        ``m_pad``, split where the spread exceeds ``fuse_max_m_ratio``.
+        """
+        total = sum(len(q) for q in self._queues.values())
+        if total < self.max_batch:
+            return None
+        cands = sorted(
+            ((b, q) for b, q in self._queues.items()
+             if q and self._fuse_ok(b)),
+            key=lambda t: t[0])
+        if len(cands) < 2:
+            return None
+        best: List[Tuple[int, list]] = []
+        best_rows = 0
+        cur: List[Tuple[int, list]] = []
+        cur_rows = 0
+        for b, q in cands:
+            if cur and b > cur[0][0] * self.fuse_max_m_ratio:
+                cur, cur_rows = [], 0
+            cur.append((b, q))
+            cur_rows += len(q)
+            if len(cur) >= 2 and cur_rows > best_rows:
+                best, best_rows = list(cur), cur_rows
+        if best_rows < self.max_batch:
+            return None
+        for b, _ in best:
+            self._queues.pop(b)
+        return best
 
     def submit_many(self, As, bs, cs, m_valid=None) -> List[Future]:
         """Row-wise submit of stacked arrays (B, m, 2)/(B, m)/(B, 2);
@@ -530,26 +640,69 @@ class BatchScheduler:
         (dispatched — use :meth:`drain` or the futures to wait for
         completion in pipelined mode).
 
-        One bucket's failure never orphans another's futures: every
-        drained bucket is dispatched regardless, each failure lands on
+        One unit's failure never orphans another's futures: every
+        drained unit is dispatched regardless, each failure lands on
         its own flush's futures, and the first error is re-raised only
         after the loop.
         """
         with self._lock:
             drained = [(bm, q) for bm, q in self._queues.items() if q]
             self._queues = {}
+        return self._solve_drained(drained, reason="manual")
+
+    def _solve_drained(self, drained: List[Tuple[int, list]], *,
+                       reason: str) -> int:
+        """Dispatch already-popped buckets as flush units (fused where
+        the planner allows), isolating per-unit errors."""
         n = 0
         first_err: Optional[BaseException] = None
-        for bm, reqs in drained:
+        for parts in self._plan_units(drained):
             try:
-                self._solve(bm, reqs, reason="manual")
+                self._solve_unit(
+                    parts,
+                    reason="fused" if len(parts) > 1 else reason)
             except Exception as e:
                 if first_err is None:
                     first_err = e
-            n += len(reqs)
+            n += sum(len(q) for _, q in parts)
         if first_err is not None:
             raise first_err
         return n
+
+    def _plan_units(self, drained: List[Tuple[int, list]]
+                    ) -> List[List[Tuple[int, list]]]:
+        """Partition drained buckets into flush units.
+
+        With fusing off (or one bucket) every bucket is its own unit —
+        the pre-mesh behaviour.  Otherwise buckets that are underfull
+        *and* policy-fusable are sorted by ``m_pad`` and greedily
+        packed into fused units, closing a unit when the m-spread
+        would exceed ``fuse_max_m_ratio`` (pad-cell waste) or the row
+        count would exceed ``max_batch`` (keeps fused ``b_pad`` on the
+        same ladder rungs normal flushes compile)."""
+        if not self.fuse or len(drained) < 2:
+            return [[(bm, q)] for bm, q in drained]
+        singles: List[List[Tuple[int, list]]] = []
+        cands: List[Tuple[int, list]] = []
+        for bm, q in drained:
+            if len(q) >= self._limits_for(bm)[0] or not self._fuse_ok(bm):
+                singles.append([(bm, q)])
+            else:
+                cands.append((bm, q))
+        cands.sort(key=lambda t: t[0])
+        units: List[List[Tuple[int, list]]] = []
+        cur: List[Tuple[int, list]] = []
+        cur_rows = 0
+        for bm, q in cands:
+            if cur and (bm > cur[0][0] * self.fuse_max_m_ratio
+                        or cur_rows + len(q) > self.max_batch):
+                units.append(cur)
+                cur, cur_rows = [], 0
+            cur.append((bm, q))
+            cur_rows += len(q)
+        if cur:
+            units.append(cur)
+        return singles + units
 
     def pending(self) -> int:
         with self._lock:
@@ -563,17 +716,10 @@ class BatchScheduler:
                 if q and now - q[0].t_submit >= self._limits_for(bm)[1]]
             for bm, _ in expired:
                 self._queues.pop(bm)
-        first_err: Optional[BaseException] = None
-        for bm, reqs in expired:
-            try:
-                self._solve(bm, reqs, reason="wait")
-            except Exception as e:
-                # The failing bucket's futures already carry e; keep
-                # flushing the remaining buckets so none are orphaned.
-                if first_err is None:
-                    first_err = e
-        if first_err is not None:
-            raise first_err
+        # Expired buckets fuse with each other when the planner allows:
+        # wait-triggered flushes are underfull by definition, the exact
+        # case fused units exist for.
+        self._solve_drained(expired, reason="wait")
 
     # -- background wait-trigger thread ----------------------------------
 
@@ -658,30 +804,47 @@ class BatchScheduler:
 
     def _solve(self, bm: int, reqs: List[_Pending], *, reason: str,
                pre_counted: bool = False) -> None:
-        """Flush one bucket: assemble, dispatch and — pipelined — hand
-        completion to the worker.  Errors on the assemble/dispatch path
-        reach every future of this flush and re-raise.
+        """Flush one bucket (the single-bucket unit)."""
+        self._solve_unit([(bm, reqs)], reason=reason,
+                         pre_counted=pre_counted)
+
+    def _solve_unit(self, parts: List[Tuple[int, List[_Pending]]], *,
+                    reason: str, pre_counted: bool = False) -> None:
+        """Flush one unit — one bucket, or several fused: assemble,
+        dispatch and — pipelined — hand completion to the worker.  A
+        fused unit solves every member's requests in a single
+        super-batch padded to the largest member's ``m_pad`` (the
+        per-problem results are bit-identical either way — padding
+        columns are neutral).  Errors on the assemble/dispatch path
+        reach every future of this unit and re-raise.
 
         Requests whose future was cancelled while queued (deadline
         expiry in the RPC layer) are dropped here — expired work is
-        cancelled instead of solved; a flush that cancels down to
+        cancelled instead of solved; a unit that cancels down to
         nothing is skipped entirely.  Surviving futures are *claimed*
         (``set_running_or_notify_cancel``) so a later ``cancel()`` from
         another thread returns False instead of racing the completion
         scatter."""
-        reqs = [r for r in reqs
-                if r.future.set_running_or_notify_cancel()]
-        if not reqs:
+        live: List[Tuple[int, List[_Pending]]] = []
+        for bm_i, q in parts:
+            kept = [r for r in q
+                    if r.future.set_running_or_notify_cancel()]
+            if kept:
+                live.append((bm_i, kept))
+        if not live:
             if pre_counted:
                 with self._inflight_cv:
                     self._active -= 1
                     self._inflight_cv.notify_all()
             return
+        bm = max(bm_i for bm_i, _ in live)
+        reqs = [r for _, q in live for r in q]
         if not pre_counted:
             with self._inflight_cv:
                 self._active += 1
         try:
-            unit = self._assemble(bm, reqs, reason)
+            unit = self._assemble(bm, reqs, reason,
+                                  n_buckets=len(live))
             self._dispatch(unit)
         except Exception as e:  # propagate to every waiter, don't hang
             with self._inflight_cv:
@@ -696,16 +859,17 @@ class BatchScheduler:
                 raise err
 
     def _assemble(self, bm: int, reqs: List[_Pending],
-                  reason: str) -> _InflightFlush:
+                  reason: str, n_buckets: int = 1) -> _InflightFlush:
         """Host-side stage: lease packed buffers, fill them directly in
         the SoA layout (neutral columns/problems are a_x = a_y = 0,
         b = PAD_B, c = (1, 0), m_valid = 0 — no AoS intermediate, no
         device-side re-stack) and resolve the executable."""
         B = len(reqs)
         pinned = self._pin_for_bucket(bm, B)
-        b_pad = bucket_batch(B, pinned.tile * len(self._devices))
+        b_pad = bucket_batch(B, self._unit_for_tile(pinned.tile))
         spec = ExecSpec(bucket_m=bm, b_pad=b_pad, solver=pinned,
-                        n_devices=len(self._devices))
+                        n_devices=len(self._devices),
+                        sharding=self.sharding)
         t0 = time.perf_counter()
         key, bufs = self.buffers.lease(b_pad, bm, self._dtype)
         try:
@@ -726,7 +890,7 @@ class BatchScheduler:
         return _InflightFlush(
             name=f"flush-{seq} m{bm}xb{b_pad}", bucket_m=bm, b_pad=b_pad,
             reqs=reqs, reason=reason, exe=exe, buf_key=key, bufs=bufs,
-            t_assemble=t0)
+            t_assemble=t0, n_buckets=n_buckets)
 
     def _dispatch(self, unit: _InflightFlush) -> None:
         """Async stage: reserve an in-flight slot (backpressure — blocks
@@ -839,7 +1003,10 @@ class BatchScheduler:
             sum_m=sum(r.m for r in unit.reqs),
             solve_seconds=unit.t_complete - unit.t_dispatch,
             assemble_seconds=unit.t_dispatch - unit.t_assemble,
-            reason=unit.reason)
+            reason=unit.reason,
+            n_buckets=unit.n_buckets,
+            launches=getattr(unit.exe, "n_launches", 1),
+            shards=getattr(unit.exe, "shards", ()))
         for i, r in enumerate(unit.reqs):
             if r.future.done():
                 continue

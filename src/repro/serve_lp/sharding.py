@@ -1,12 +1,21 @@
 """Executable builder: one ExecSpec -> one dispatch/complete Executable.
 
-Single device: a ``jax.jit`` closure over the spec.  Multiple devices:
-``jax.pmap`` over the leading (device) axis — the flushed super-batch is
-split evenly across ``jax.devices()`` along the batch dimension, each
-shard solves independently (batch LP is embarrassingly parallel across
-problems), and results gather back to host order.  The scheduler
-guarantees ``b_pad % (tile * n_devices) == 0`` so every shard is a whole
-number of kernel tiles.
+A spec's ``sharding`` mode picks how the flushed super-batch spreads
+over devices:
+
+* ``"mesh"`` (default) — a :class:`~repro.serve_lp.mesh_layout.MeshLayout`
+  plans per-device row counts (uneven shards allowed; unused devices
+  get zero rows) and each :class:`~repro.serve_lp.mesh_layout.LaunchGroup`
+  compiles to ``jax.jit(shard_map(solve))`` over a contiguous sub-mesh.
+  The planner owns padding: ``b_pad`` only needs to be positive — rows
+  are padded with neutral LPs up to whole kernel tiles here, never up
+  to ``tile * n_devices`` blocks, so a prime-sized flush on 4 devices
+  is legal.  A single local device compiles to plain ``jax.jit``
+  (identical to the pre-mesh path).
+* ``"pmap"`` — the legacy path, kept as a one-release escape hatch:
+  ``jax.pmap`` splits the batch evenly over *all* devices and requires
+  ``b_pad % (tile * n_devices) == 0``.  Tests assert the two paths are
+  bit-identical; prefer ``"mesh"``.
 
 Built executables are *two-stage* so the serve loop can pipeline:
 
@@ -30,7 +39,8 @@ is gated off there.
 The solve wraps the packed block in a
 :class:`~repro.core.packed.PackedLPBatch` view (no repack) and runs the
 same :func:`repro.solver.solve_with_spec` core as every other entry
-point.
+point.  Because every problem row is independent, per-problem results
+do not depend on which device solved them — sharding is pure layout.
 """
 from __future__ import annotations
 
@@ -38,9 +48,18 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.packed import PackedLPBatch
+from repro.core.lp import PAD_B
 from repro.serve_lp.buckets import ExecSpec
+from repro.serve_lp.mesh_layout import (
+    DATA_AXIS,
+    MeshLayout,
+    make_mesh,
+    plan_layout,
+)
 from repro.solver import solve_with_spec
 
 # Platforms where XLA actually honours input buffer donation; CPU
@@ -75,16 +94,29 @@ class Executable:
     ``donated`` records whether the packed ``L`` input is donated to
     XLA (its device buffer is reused for outputs; the *host* buffer is
     unaffected and still owned by the flush-buffer pool until the
-    flush completes).
+    flush completes).  ``layout`` is the :class:`MeshLayout` the
+    executable was planned with (``None`` for legacy/injected
+    executables); ``shards``/``n_launches`` expose the per-device row
+    counts and device-launch count for metrics.
     """
 
-    __slots__ = ("_dispatch", "_complete", "donated")
+    __slots__ = ("_dispatch", "_complete", "donated", "layout")
 
     def __init__(self, dispatch: Callable, complete: Callable, *,
-                 donated: bool = False):
+                 donated: bool = False,
+                 layout: Optional[MeshLayout] = None):
         self._dispatch = dispatch
         self._complete = complete
         self.donated = donated
+        self.layout = layout
+
+    @property
+    def shards(self) -> Tuple[int, ...]:
+        return self.layout.shards if self.layout is not None else ()
+
+    @property
+    def n_launches(self) -> int:
+        return self.layout.n_launches if self.layout is not None else 1
 
     def dispatch(self, L, c, mv) -> Any:
         """Enqueue the solve; returns the in-flight result handle."""
@@ -109,22 +141,74 @@ def as_executable(fn) -> Executable:
     return Executable(fn, lambda handle: handle)
 
 
-def build_executable(
-    spec: ExecSpec,
-    devices: Optional[Sequence[jax.Device]] = None,
-) -> Executable:
-    """Compile-on-first-call solver for one spec.  ``devices`` defaults
-    to ``jax.devices()``; a single device falls back to plain jit."""
-    devices = list(devices) if devices is not None else jax.devices()
-    if len(devices) != spec.n_devices:
-        raise ValueError(
-            f"spec.n_devices={spec.n_devices} != len(devices)="
-            f"{len(devices)}")
-    solve = _make_solve(spec)
-    D = spec.n_devices
-    donate = all(d.platform in _DONATING_PLATFORMS for d in devices)
-    donate_kw = {"donate_argnums": (0,)} if donate else {}
+def _pad_rows(L, c, mv, b_pad: int):
+    """Extend host buffers with neutral LPs (always-feasible, m_valid=0)
+    up to ``b_pad`` rows — the planner-owned padding for flush sizes
+    that are not whole-tile multiples."""
+    n = b_pad - L.shape[0]
+    if n <= 0:
+        return L, c, mv
+    Lp = np.zeros((n,) + L.shape[1:], dtype=L.dtype)
+    Lp[:, 2, :] = PAD_B
+    cp = np.zeros((n, 2), dtype=c.dtype)
+    cp[:, 0] = 1.0
+    mvp = np.zeros((n, 1), dtype=mv.dtype)
+    return (np.concatenate([L, Lp]), np.concatenate([c, cp]),
+            np.concatenate([mv, mvp]))
 
+
+def _build_mesh_executable(spec: ExecSpec, devices, solve,
+                           donate_kw) -> Executable:
+    """Plan a :class:`MeshLayout` for the spec and compile one
+    ``shard_map`` launch per :class:`LaunchGroup` (uneven layouts need
+    at most two).  Each group jits over its own contiguous sub-mesh,
+    so group launches land on disjoint devices and overlap."""
+    layout = plan_layout(spec.b_pad, spec.tile, len(devices))
+
+    launches = []
+    for g in layout.groups:
+        group_devs = devices[g.start:g.start + g.n_devices]
+        if len(group_devs) == 1 and len(devices) == 1:
+            # Single local device: plain jit, identical to the
+            # pre-mesh path (no mesh machinery to pay for).
+            fn = jax.jit(solve, **donate_kw)
+        else:
+            mesh = make_mesh(group_devs)
+            # check_rep=False: every in/out is sharded over DATA_AXIS
+            # (nothing replicated to check) and the pallas_call kernel
+            # backend has no replication rule at all.
+            fn = jax.jit(
+                shard_map(
+                    solve, mesh=mesh,
+                    in_specs=(P(DATA_AXIS), P(DATA_AXIS), P(DATA_AXIS)),
+                    out_specs=(P(DATA_AXIS), P(DATA_AXIS)),
+                    check_rep=False),
+                **donate_kw)
+        launches.append((g.offset, g.rows, fn))
+
+    b_pad = spec.b_pad
+
+    def dispatch(L, c, mv):
+        if L.shape[0] != layout.b_pad:
+            L, c, mv = _pad_rows(L, c, mv, layout.b_pad)
+        return tuple(fn(L[o:o + n], c[o:o + n], mv[o:o + n])
+                     for o, n, fn in launches)
+
+    def complete(handles):
+        xs = [np.asarray(h[0]) for h in handles]
+        fs = [np.asarray(h[1]) for h in handles]
+        x = xs[0] if len(xs) == 1 else np.concatenate(xs)
+        feas = fs[0] if len(fs) == 1 else np.concatenate(fs)
+        return x[:b_pad], feas[:b_pad]
+
+    return Executable(dispatch, complete,
+                      donated=bool(donate_kw), layout=layout)
+
+
+def _build_pmap_executable(spec: ExecSpec, devices, solve,
+                           donate_kw) -> Executable:
+    """Legacy even-split path (``sharding="pmap"`` escape hatch)."""
+    D = len(devices)
     if D == 1:
         jitted = jax.jit(solve, **donate_kw)
 
@@ -132,7 +216,9 @@ def build_executable(
             x, feas = handle
             return np.asarray(x), np.asarray(feas)
 
-        return Executable(jitted, complete, donated=donate)
+        return Executable(
+            jitted, complete, donated=bool(donate_kw),
+            layout=MeshLayout(shards=(spec.b_pad,), tile=spec.tile))
 
     pmapped = jax.pmap(solve, devices=devices, **donate_kw)
     per = spec.b_pad // D
@@ -148,4 +234,26 @@ def build_executable(
         return (np.asarray(x).reshape(spec.b_pad, 2),
                 np.asarray(feas).reshape(spec.b_pad))
 
-    return Executable(dispatch, complete, donated=donate)
+    return Executable(
+        dispatch, complete, donated=bool(donate_kw),
+        layout=MeshLayout(shards=(per,) * D, tile=spec.tile))
+
+
+def build_executable(
+    spec: ExecSpec,
+    devices: Optional[Sequence[jax.Device]] = None,
+) -> Executable:
+    """Compile-on-first-call solver for one spec.  ``devices`` defaults
+    to ``jax.devices()``."""
+    devices = list(devices) if devices is not None else jax.devices()
+    if len(devices) != spec.n_devices:
+        raise ValueError(
+            f"spec.n_devices={spec.n_devices} != len(devices)="
+            f"{len(devices)}")
+    solve = _make_solve(spec)
+    donate = all(d.platform in _DONATING_PLATFORMS for d in devices)
+    donate_kw = {"donate_argnums": (0,)} if donate else {}
+
+    if spec.sharding == "pmap":
+        return _build_pmap_executable(spec, devices, solve, donate_kw)
+    return _build_mesh_executable(spec, devices, solve, donate_kw)

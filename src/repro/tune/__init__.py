@@ -23,8 +23,10 @@ Regenerate tables offline with ``python -m benchmarks.tune_cli``; pin a
 table per process with :func:`set_active_table`/:func:`use_table` or
 the ``REPRO_TUNE_TABLE`` environment variable.
 """
-from repro.tune.runner import (TuneResult, measure, representative_batch,
-                               results_to_entries, time_candidate, tune,
+from repro.tune.runner import (TuneResult, measure, measure_stats,
+                               representative_batch,
+                               results_to_entries, time_candidate,
+                               time_candidate_stats, tune,
                                tune_shape)
 from repro.tune.space import (Candidate, candidate_space,
                               default_backends)
@@ -40,7 +42,7 @@ __all__ = [
     "TuneResult", "TuningTable", "active_table", "bucket_pow2",
     "candidate_space", "current_device_kind", "default_backends",
     "default_table", "device_platform", "lookup", "measure",
-    "normalize_device_kind", "representative_batch",
-    "results_to_entries", "set_active_table", "time_candidate", "tune",
-    "tune_shape", "use_table",
+    "measure_stats", "normalize_device_kind", "representative_batch",
+    "results_to_entries", "set_active_table", "time_candidate",
+    "time_candidate_stats", "tune", "tune_shape", "use_table",
 ]

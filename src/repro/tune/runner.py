@@ -40,23 +40,35 @@ DEFAULT_ITERS = 5
 
 @dataclasses.dataclass(frozen=True)
 class TuneResult:
-    """One timed candidate at one shape."""
+    """One timed candidate at one shape, with the measurement spread
+    (``iqr_seconds`` over ``k`` repetitions) kept alongside the median
+    so table merges can tell improvement from noise."""
 
     candidate: Candidate
     m_pad: int
     batch: int
     dtype: str
     device_kind: str
-    seconds: float       # median wall-clock per solve
+    seconds: float            # median wall-clock per solve
+    iqr_seconds: float = 0.0  # interquartile range of the samples
+    k: int = 1                # timed repetitions
 
     @property
     def us_per_lp(self) -> float:
         return self.seconds / self.batch * 1e6
 
+    @property
+    def us_iqr(self) -> float:
+        return self.iqr_seconds / self.batch * 1e6
 
-def measure(fn, *args, warmup: int = DEFAULT_WARMUP,
-            iters: int = DEFAULT_ITERS) -> float:
-    """Median wall-clock seconds of ``fn(*args)``, device-fenced."""
+
+def measure_stats(fn, *args, warmup: int = DEFAULT_WARMUP,
+                  iters: int = DEFAULT_ITERS
+                  ) -> Tuple[float, float, int]:
+    """``(median, iqr, k)`` wall-clock seconds of ``fn(*args)``,
+    device-fenced.  The IQR (75th - 25th percentile of the sorted
+    samples, by index — exact quartile interpolation would be false
+    precision at these k) is the noise band table merges honour."""
     if iters < 1:
         raise ValueError(f"iters={iters} < 1")
     for _ in range(warmup):
@@ -67,7 +79,16 @@ def measure(fn, *args, warmup: int = DEFAULT_WARMUP,
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     ts.sort()
-    return ts[len(ts) // 2]
+    n = len(ts)
+    median = ts[n // 2]
+    iqr = ts[(3 * n) // 4] - ts[n // 4] if n > 1 else 0.0
+    return median, iqr, n
+
+
+def measure(fn, *args, warmup: int = DEFAULT_WARMUP,
+            iters: int = DEFAULT_ITERS) -> float:
+    """Median wall-clock seconds of ``fn(*args)``, device-fenced."""
+    return measure_stats(fn, *args, warmup=warmup, iters=iters)[0]
 
 
 def representative_batch(m_pad: int, batch: int, *,
@@ -102,9 +123,22 @@ def time_candidate(cand: Candidate, pb: PackedLPBatch, *,
                    warmup: int = DEFAULT_WARMUP,
                    iters: int = DEFAULT_ITERS) -> float:
     """Median seconds for one candidate over one packed batch."""
+    return time_candidate_stats(cand, pb, dtype=dtype,
+                                interpret=interpret, warmup=warmup,
+                                iters=iters)[0]
+
+
+def time_candidate_stats(cand: Candidate, pb: PackedLPBatch, *,
+                         dtype: str = "float32",
+                         interpret: Optional[bool] = None,
+                         warmup: int = DEFAULT_WARMUP,
+                         iters: int = DEFAULT_ITERS
+                         ) -> Tuple[float, float, int]:
+    """``(median, iqr, k)`` seconds for one candidate over one packed
+    batch."""
     solver = candidate_spec(cand, dtype=dtype,
                             interpret=interpret).build()
-    return measure(solver.solve, pb, warmup=warmup, iters=iters)
+    return measure_stats(solver.solve, pb, warmup=warmup, iters=iters)
 
 
 def tune_shape(
@@ -125,12 +159,13 @@ def tune_shape(
     results = []
     for cand in candidate_space(m_pad, batch, dtype=dtype,
                                 device_kind=kind, backends=backends):
-        seconds = time_candidate(cand, pb, dtype=dtype,
-                                 interpret=interpret, warmup=warmup,
-                                 iters=iters)
+        seconds, iqr, k = time_candidate_stats(
+            cand, pb, dtype=dtype, interpret=interpret, warmup=warmup,
+            iters=iters)
         results.append(TuneResult(candidate=cand, m_pad=m_pad,
                                   batch=batch, dtype=dtype,
-                                  device_kind=kind, seconds=seconds))
+                                  device_kind=kind, seconds=seconds,
+                                  iqr_seconds=iqr, k=k))
     results.sort(key=lambda r: r.seconds)
     return results
 
@@ -151,7 +186,8 @@ def results_to_entries(results: Iterable[TuneResult]) -> List[TableEntry]:
             batch_bucket=bucket_pow2(r.batch, BATCH_BUCKET_BASE))
         entries.append(TableEntry(key=key, tile=r.candidate.tile,
                                   chunk=r.candidate.chunk,
-                                  us_per_lp=r.us_per_lp))
+                                  us_per_lp=r.us_per_lp,
+                                  us_iqr=r.us_iqr, k=r.k))
     return entries
 
 

@@ -3,18 +3,22 @@ replaces launch-geometry guessing.
 
 A :class:`TuningTable` maps a :class:`TableKey` — ``(device_kind,
 backend, dtype, m_bucket, batch_bucket)`` — to the fastest measured
-``(tile, chunk)`` for that shape class, together with the measured
-µs/LP so merges can keep the faster of two records.  Shape dimensions
-are bucketed on the same geometric ladders the serving layer uses
-(double from a small base), so one entry covers every shape that lands
-in its bucket and the table stays a few dozen rows per device.
+``(tile, chunk)`` for that shape class, together with the measurement
+statistics ``(us_per_lp median, us_iqr, k repetitions)`` so merges can
+tell a real improvement from timing noise.  Shape dimensions are
+bucketed on the same geometric ladders the serving layer uses (double
+from a small base), so one entry covers every shape that lands in its
+bucket and the table stays a few dozen rows per device.
 
 Tables serialise to versioned JSON (:meth:`TuningTable.save` /
-:meth:`TuningTable.load`), merge monotonically (faster entry wins, so
-re-running the tuner can only improve the table), and ship with a
-bundled default (``default_table.json``, CPU entries measured by
-``benchmarks/tune_cli.py`` in the reference container, TPU entries
-seeded from the VMEM heuristic until the CLI runs on real hardware).
+:meth:`TuningTable.load`), merge monotonically with a noise dead zone
+(a new entry wins only when faster by more than the larger of the two
+IQRs, so re-running the tuner can only genuinely improve the table),
+and ship with a bundled default (``default_table.json``, CPU entries
+measured by ``benchmarks/tune_cli.py`` in the reference container, TPU
+entries seeded from the VMEM heuristic until the CLI runs on real
+hardware).  Rows written before the stats slice load unchanged —
+``us_iqr``/``k`` default to ``0.0``/``1`` (no spread recorded).
 
 The process-wide *active table* is what
 :meth:`repro.solver.SolverSpec.resolve_for_shape` consults.  It is the
@@ -113,6 +117,8 @@ class TableEntry:
     chunk: int
     us_per_lp: float          # measured median microseconds per LP
     source: str = "measured"  # "measured" | "heuristic-seed"
+    us_iqr: float = 0.0       # interquartile range of the µs/LP samples
+    k: int = 1                # timing repetitions behind the median
 
     def __post_init__(self):
         if self.tile < 1:
@@ -121,6 +127,17 @@ class TableEntry:
             raise ValueError(f"chunk={self.chunk} < 0")
         if not self.us_per_lp >= 0.0:
             raise ValueError(f"us_per_lp={self.us_per_lp} must be >= 0")
+        if not self.us_iqr >= 0.0:
+            raise ValueError(f"us_iqr={self.us_iqr} must be >= 0")
+        if self.k < 1:
+            raise ValueError(f"k={self.k} < 1")
+
+    @property
+    def noise_band_us(self) -> float:
+        """The spread below which two medians of this entry are
+        statistically indistinguishable (its IQR; 0 for single-shot
+        or seeded entries — they carry no spread information)."""
+        return self.us_iqr
 
 
 class TuningTable:
@@ -155,11 +172,32 @@ class TuningTable:
         return self._entries.get(key)
 
     def merge(self, other: "TuningTable") -> "TuningTable":
-        """Fold ``other`` into this table in place (faster entry wins
-        per key); returns self for chaining."""
+        """Fold ``other`` into this table in place; returns self for
+        chaining.
+
+        A new entry wins only when it is faster *beyond the noise
+        band* — the larger of the two entries' recorded IQRs — so
+        re-running the tuner on a noisy machine cannot churn the table
+        with statistically meaningless "improvements" (merge stays
+        monotone in measured speed, now with a dead zone).  Two
+        exceptions keep the table honest: a measured entry always
+        replaces a heuristic seed (seeds carry sentinel timings, not
+        measurements), and a seed never replaces a measurement."""
         for key, entry in other._entries.items():
             mine = self._entries.get(key)
-            if mine is None or entry.us_per_lp < mine.us_per_lp:
+            if mine is None:
+                self._entries[key] = entry
+                continue
+            if entry.source == "heuristic-seed":
+                if mine.source == "heuristic-seed" \
+                        and entry.us_per_lp < mine.us_per_lp:
+                    self._entries[key] = entry
+                continue
+            if mine.source == "heuristic-seed":
+                self._entries[key] = entry
+                continue
+            band = max(entry.noise_band_us, mine.noise_band_us)
+            if entry.us_per_lp < mine.us_per_lp - band:
                 self._entries[key] = entry
         return self
 
@@ -220,7 +258,7 @@ class TuningTable:
             "entries": [
                 {**dataclasses.asdict(e.key), "tile": e.tile,
                  "chunk": e.chunk, "us_per_lp": e.us_per_lp,
-                 "source": e.source}
+                 "source": e.source, "us_iqr": e.us_iqr, "k": e.k}
                 for e in self.entries()
             ],
         }
@@ -240,10 +278,15 @@ class TuningTable:
                 backend=row.pop("backend"), dtype=row.pop("dtype"),
                 m_bucket=int(row.pop("m_bucket")),
                 batch_bucket=int(row.pop("batch_bucket")))
+            # us_iqr/k default for rows written before the stats slice
+            # (same version: old tables load, their entries just carry
+            # no spread and merge with a zero noise band).
             entries.append(TableEntry(
                 key=key, tile=int(row["tile"]), chunk=int(row["chunk"]),
                 us_per_lp=float(row["us_per_lp"]),
-                source=str(row.get("source", "measured"))))
+                source=str(row.get("source", "measured")),
+                us_iqr=float(row.get("us_iqr", 0.0)),
+                k=int(row.get("k", 1))))
         return cls(entries)
 
     def save(self, path) -> Path:

@@ -14,6 +14,7 @@ import math
 import time
 from concurrent.futures import InvalidStateError
 
+import jax
 import numpy as np
 import pytest
 
@@ -62,6 +63,15 @@ def _body(resp):
 @pytest.fixture
 def frontend():
     f = make_frontend(SPEC, max_batch=4, max_wait_s=0.003)
+    f.start()
+    yield f
+    f.close()
+
+
+@pytest.fixture
+def frontend_slo():
+    f = make_frontend(SPEC, max_batch=4, max_wait_s=0.003,
+                      target_p99_s=0.05)
     f.start()
     yield f
     f.close()
@@ -389,7 +399,10 @@ def _measured_table(us_per_lp, m_bucket=8, tile=16):
 
 
 def test_slo_derives_limits_from_measured_latency():
-    sched = BatchScheduler(SPEC, max_batch=256, max_wait_s=0.005)
+    # one pinned device so the flush-time arithmetic below stays exact
+    # whatever XLA_FLAGS forced-device count the suite runs under
+    sched = BatchScheduler(SPEC, max_batch=256, max_wait_s=0.005,
+                           devices=jax.devices()[:1])
     slo = SLOController(0.05, table=_measured_table(50.0),
                         device_kind="cpu")
     slo.install(sched, m_max=8)
@@ -407,7 +420,8 @@ def test_slo_derives_limits_from_measured_latency():
 
 
 def test_slo_caps_batch_for_slow_buckets():
-    sched = BatchScheduler(SPEC, max_batch=256, max_wait_s=0.005)
+    sched = BatchScheduler(SPEC, max_batch=256, max_wait_s=0.005,
+                           devices=jax.devices()[:1])
     slo = SLOController(0.05, table=_measured_table(500.0),
                         device_kind="cpu")
     slo.install(sched, m_max=8)
@@ -439,6 +453,98 @@ def test_slo_ignores_heuristic_seeded_entries():
     slo = SLOController(0.05, table=table, device_kind="cpu")
     slo.install(sched, m_max=8)
     assert slo.plans()[8].source == "default"
+
+
+def test_slo_allow_fuse_veto_from_next_rung_timing():
+    """Fusing solves a bucket at the next ladder rung's m_pad; when the
+    measured timing there blows the flush-service budget, the plan
+    vetoes fusing and the installed policy keeps the bucket out of
+    fused units — while slower-but-unmeasured rungs stay fusable."""
+    table = TuningTable([
+        TableEntry(key=TableKey(device_kind="cpu", backend="rgb",
+                                dtype="float32", m_bucket=8,
+                                batch_bucket=0),
+                   tile=16, chunk=0, us_per_lp=50.0, source="measured"),
+        # the m=16 rung is measured catastrophically slow: a fused
+        # flush carrying bucket-8 work at m_pad=16 would blow the p99
+        TableEntry(key=TableKey(device_kind="cpu", backend="rgb",
+                                dtype="float32", m_bucket=16,
+                                batch_bucket=0),
+                   tile=16, chunk=0, us_per_lp=1e5, source="measured"),
+    ])
+    sched = BatchScheduler(SPEC, max_batch=256, max_wait_s=0.005,
+                           devices=jax.devices()[:1])
+    slo = SLOController(0.05, table=table, device_kind="cpu")
+    slo.install(sched, m_max=16)
+    plans = slo.plans()
+    assert plans[8].allow_fuse is False
+    # bucket 16's own next rung (32) has no measurement: fusable
+    assert plans[16].allow_fuse is True
+    assert sched._fuse_ok(8) is False
+    assert sched._fuse_ok(16) is True
+
+
+def test_slo_flush_estimate_divides_by_used_devices_only():
+    """The mesh-aware service model: a full flush spreads over all
+    devices, so its estimated service time shrinks with the device
+    count — which loosens the batch cap relative to one device."""
+    sched = BatchScheduler(SPEC, max_batch=256, max_wait_s=0.005,
+                           devices=jax.devices()[:1])
+    # planning-only stand-in for a 4-device mesh (no executables are
+    # built through this scheduler)
+    sched._devices = sched._devices * 4
+    slo = SLOController(0.05, table=_measured_table(50.0),
+                        device_kind="cpu")
+    plan = slo.plan_for(sched, 8)
+    # 50us/LP * 256 rows over min(4, 256/16)=4 used devices = 3.2ms
+    assert plan.est_flush_s == pytest.approx(3.2e-3)
+    assert plan.max_batch == 256
+
+
+def test_render_metrics_slo_and_sharding_families():
+    """The scrape exposes the SLO per-bucket plans and the fused/launch
+    counters as labelled families."""
+    from repro.serve_lp.rpc.slo import BucketPlan
+    m = ServeMetrics()
+    m.record_flush(n_real=3, b_pad=16, bucket_m=16, sum_m=30,
+                   solve_seconds=0.01, reason="fused", n_buckets=2,
+                   launches=2, shards=(8, 8))
+    snap = m.snapshot()
+    plans = {8: BucketPlan(bucket_m=8, max_batch=32, max_wait_s=0.01,
+                           est_flush_s=0.004, source="measured",
+                           allow_fuse=False),
+             16: BucketPlan(bucket_m=16, max_batch=64, max_wait_s=0.02,
+                            est_flush_s=None, source="default")}
+    text = render_metrics(snap, slo=plans)
+    validate_exposition(text)
+    assert ('repro_serve_slo_bucket_max_batch{bucket_m="8",'
+            'source="measured"} 32') in text
+    assert ('repro_serve_slo_bucket_max_wait_seconds{bucket_m="16",'
+            'source="default"} 0.02') in text
+    assert ('repro_serve_slo_bucket_allow_fuse{bucket_m="8",'
+            'source="measured"} 0') in text
+    assert ('repro_serve_slo_bucket_allow_fuse{bucket_m="16",'
+            'source="default"} 1') in text
+    # est_flush renders 0 (not NaN) when no measured entry exists
+    assert ('repro_serve_slo_bucket_est_flush_seconds{bucket_m="16",'
+            'source="default"} 0') in text
+    assert "repro_serve_launches_total 2" in text
+    assert "repro_serve_fused_flushes_total 1" in text
+    assert "repro_serve_fused_buckets_total 2" in text
+    assert 'repro_serve_device_rows_total{device="0"} 8' in text
+    assert 'repro_serve_device_rows_total{device="1"} 8' in text
+
+
+def test_metrics_endpoint_exposes_slo_plans(frontend_slo):
+    """An SLO-enabled front end publishes its per-bucket plans on
+    /metrics after traffic has touched a bucket."""
+    _post(frontend_slo, _problem_json(*_lp()))
+    resp = _get(frontend_slo, "/metrics")
+    assert resp.status == 200
+    text = resp.body.decode()
+    validate_exposition(text)
+    assert "repro_serve_slo_bucket_max_batch{" in text
+    assert "repro_serve_slo_bucket_allow_fuse{" in text
 
 
 def test_scheduler_per_bucket_policy_drives_size_trigger():

@@ -14,8 +14,9 @@ from repro.core import (concat_batches, make_batch, pack_call_count,
 from repro.kernels import ops
 from repro.solver import get_solver
 from repro.serve_lp import (BatchScheduler, ExecSpec, ExecutableCache,
-                            ServeMetrics, SolverSpec, as_executable,
-                            bucket_batch, bucket_m, build_executable,
+                            LaunchGroup, MeshLayout, ServeMetrics,
+                            SolverSpec, as_executable, bucket_batch,
+                            bucket_m, build_executable, plan_layout,
                             shape_ladder)
 from repro.serve_lp.bench import BenchConfig, make_request, run_traffic
 from repro.serve_lp.scheduler import _FlushBufferPool
@@ -74,9 +75,18 @@ def test_exec_spec_validation():
                  solver=SolverSpec(backend="kernel", tile=32))
     ExecSpec(bucket_m=16, b_pad=32, solver=SolverSpec(backend="rgb",
                                                       tile=32))
+    # mesh sharding (default) owns padding: any positive b_pad is
+    # legal; the legacy pmap path still needs whole equal shards
+    ExecSpec(bucket_m=128, b_pad=33,
+             solver=SolverSpec(backend="rgb", tile=32))
     with pytest.raises(ValueError):
         ExecSpec(bucket_m=128, b_pad=33,
-                 solver=SolverSpec(backend="rgb", tile=32))
+                 solver=SolverSpec(backend="rgb", tile=32),
+                 sharding="pmap")
+    with pytest.raises(ValueError):
+        ExecSpec(bucket_m=128, b_pad=32,
+                 solver=SolverSpec(backend="rgb", tile=32),
+                 sharding="banana")
     # b_pad padding needs a concrete tile (tile=None means "pick per
     # shape" on every backend now — the scheduler pins it per bucket
     # via resolve_for_shape before building an ExecSpec)
@@ -281,7 +291,10 @@ def test_scheduler_pins_tuned_config_per_bucket():
     req_small = _mixed_requests(ms=(9,), reps=1)[0]    # bucket_m 16
     req_large = _mixed_requests(ms=(70,), reps=1)[0]   # bucket_m 128
     with use_table(TuningTable([entry])):
-        sched = BatchScheduler(SolverSpec(backend="rgb"), max_batch=1000)
+        # fuse=False: this test is about *per-bucket* pinned geometry,
+        # so the two buckets must flush as separate units
+        sched = BatchScheduler(SolverSpec(backend="rgb"), max_batch=1000,
+                               fuse=False)
         f1 = sched.submit(*req_small)
         f2 = sched.submit(*req_large)
         sched.flush()
@@ -458,8 +471,11 @@ def _selective_failing_builder(fail_bucket_m):
 def test_multi_bucket_flush_failure_isolated(pipeline):
     """One bucket's failing solve must not orphan the other buckets'
     futures: every future of the flush resolves (result or exception)
-    and the first error still reaches the flush() caller."""
-    sched = BatchScheduler(max_batch=1000, tile=8, pipeline=pipeline)
+    and the first error still reaches the flush() caller.  (fuse=False:
+    with fusing the same isolation holds per flush *unit* — covered by
+    the fused-flush tests.)"""
+    sched = BatchScheduler(max_batch=1000, tile=8, pipeline=pipeline,
+                           fuse=False)
     sched.cache = ExecutableCache(_selective_failing_builder(16))
     # three buckets, dict order 8 -> 16 -> 128: the failure sits in the
     # middle so both an earlier and a later bucket must survive it
@@ -714,6 +730,233 @@ def test_bench_smoke_tiny():
     assert snap["errors"] == {}
 
 
+# -- mesh layout planning (pure layout algebra, no devices needed) -------
+
+def test_plan_layout_even_split():
+    lay = plan_layout(64, 16, 4)
+    assert lay.shards == (16, 16, 16, 16)
+    assert lay.b_pad == 64 and lay.used_devices == 4
+    (g,) = lay.groups
+    assert g.sizes == (4, 16) and g.strides == (16, 1)
+    assert g.offset == 0 and lay.n_launches == 1
+
+
+def test_plan_layout_uneven_two_groups():
+    # 5 tiles dealt over 4 devices: q/q+1 with the larger shard first,
+    # so the launch plan is exactly two contiguous groups
+    lay = plan_layout(80, 16, 4)
+    assert lay.shards == (32, 16, 16, 16)
+    g0, g1 = lay.groups
+    assert g0 == LaunchGroup(start=0, n_devices=1, rows_per_device=32,
+                             offset=0)
+    assert g1 == LaunchGroup(start=1, n_devices=3, rows_per_device=16,
+                             offset=32)
+    # the layout algebra maps (device, local row) -> global row
+    assert lay.global_row(0, 31) == 31
+    assert lay.global_row(1, 0) == 32
+    assert lay.global_row(3, 15) == 79
+    with pytest.raises(IndexError):
+        lay.global_row(1, 16)
+
+
+def test_plan_layout_underfull_skips_devices():
+    # an underfull flush simply doesn't use trailing devices (pmap
+    # would instead pad the batch 4x to occupy them)
+    lay = plan_layout(16, 16, 4)
+    assert lay.shards == (16, 0, 0, 0)
+    assert lay.used_devices == 1 and lay.n_launches == 1
+    assert lay.groups[0].rows == 16
+
+
+def test_plan_layout_prime_rows_pad_to_tile_only():
+    # the planner owns padding: prime row counts round up to whole
+    # kernel tiles, never to tile * n_devices blocks
+    lay = plan_layout(37, 16, 4)
+    assert lay.b_pad == 48 and lay.shards == (16, 16, 16, 0)
+    assert lay.pad_rows(37) == 11
+    assert "48 rows = [16 16 16 0] @ tile=16, 1 launch" == lay.describe()
+
+
+def test_plan_layout_invariants_sweep():
+    # every (rows, devices) combination: padding bounded by one tile,
+    # at most two launches, groups cover the padded batch exactly
+    for rows in range(1, 161, 7):
+        for n_dev in (1, 2, 3, 4, 5, 8):
+            lay = plan_layout(rows, 8, n_dev)
+            assert rows <= lay.b_pad < rows + 8
+            assert lay.n_launches <= 2
+            assert sum(g.rows for g in lay.groups) == lay.b_pad
+            assert lay.offsets[0] == 0
+            for g in lay.groups:
+                assert g.rows_per_device % 8 == 0
+
+
+def test_plan_layout_and_mesh_layout_validation():
+    with pytest.raises(ValueError):
+        plan_layout(0, 16, 4)
+    with pytest.raises(ValueError):
+        plan_layout(16, 0, 4)
+    with pytest.raises(ValueError):
+        plan_layout(16, 16, 0)
+    with pytest.raises(ValueError):
+        MeshLayout(shards=(15,), tile=16)   # not a tile multiple
+    with pytest.raises(ValueError):
+        MeshLayout(shards=(0, 0), tile=16)  # carries zero rows
+    with pytest.raises(ValueError):
+        MeshLayout(shards=(), tile=16)
+
+
+# -- cross-bucket fused flush units --------------------------------------
+
+def _direct_solve(spec, A, b, c):
+    return spec.build().solve(make_batch(A, b, c))
+
+
+def test_fused_flush_scatter_routing():
+    """A manual flush over several underfull buckets fuses them into
+    shared launches; every request's result still lands on its own
+    future, bit-identical to a direct solve."""
+    spec = SolverSpec(backend="rgb", tile=8)
+    sched = BatchScheduler(spec, max_batch=64, max_wait_s=60.0)
+    assert sched.fuse   # mesh sharding fuses by default
+    reqs = _mixed_requests(ms=(3, 5, 12, 14, 30, 60), reps=2)
+    futs = [sched.submit(*r) for r in reqs]
+    sched.flush()
+    results = [f.result(timeout=120.0) for f in futs]
+    sched.drain()
+    for (A, b, c), r in zip(reqs, results):
+        d = _direct_solve(spec, A, b, c)
+        assert bool(d.feasible[0]) == r.feasible
+        np.testing.assert_array_equal(np.asarray(d.x[0]), r.x)
+    snap = sched.metrics.snapshot()
+    # buckets 8/16/32/64 fused into one unit (m spread 8 <= ratio)
+    assert snap["flush_reasons"] == {"fused": 1}
+    assert snap["fused_flushes"] == 1
+    assert snap["fused_buckets"] == 4
+    assert snap["launches_total"] >= 1
+    sched.close()
+
+
+def test_fused_joint_fill_submit_trigger():
+    """Buckets that are individually under max_batch but jointly fill a
+    launch flush at submit time — no wait, no manual flush."""
+    spec = SolverSpec(backend="rgb", tile=8)
+    sched = BatchScheduler(spec, max_batch=8, max_wait_s=60.0)
+    reqs = (_mixed_requests(ms=(5,), reps=4)
+            + _mixed_requests(seed=1, ms=(12,), reps=4))
+    futs = [sched.submit(*r) for r in reqs]
+    # the 8th submit crossed the joint-fill threshold: results arrive
+    # without any flush() call or wait-trigger tick
+    results = [f.result(timeout=120.0) for f in futs]
+    sched.drain()
+    for (A, b, c), r in zip(reqs, results):
+        d = _direct_solve(spec, A, b, c)
+        assert bool(d.feasible[0]) == r.feasible
+        np.testing.assert_array_equal(np.asarray(d.x[0]), r.x)
+    snap = sched.metrics.snapshot()
+    assert snap["flush_reasons"].get("fused") == 1
+    assert snap["fused_buckets"] == 2
+    assert sched.pending() == 0
+    sched.close()
+
+
+def test_fuse_respects_m_ratio_and_disable():
+    """Buckets whose m_pad spread exceeds fuse_max_m_ratio never share
+    a unit, and fuse=False restores strict per-bucket flushes."""
+    spec = SolverSpec(backend="rgb", tile=8)
+    sched = BatchScheduler(spec, max_batch=64, max_wait_s=60.0,
+                           fuse_max_m_ratio=2.0)
+    futs = [sched.submit(*r) for r in
+            _mixed_requests(ms=(5, 12, 100), reps=1)]  # buckets 8,16,128
+    sched.flush()
+    for f in futs:
+        f.result(timeout=120.0)
+    sched.drain()
+    snap = sched.metrics.snapshot()
+    # 8 and 16 fuse (ratio 2), 128 flushes alone
+    assert snap["fused_flushes"] == 1 and snap["fused_buckets"] == 2
+    assert snap["n_flushes"] == 2
+    sched.close()
+
+    nofuse = BatchScheduler(spec, max_batch=64, max_wait_s=60.0,
+                            fuse=False)
+    futs = [nofuse.submit(*r) for r in
+            _mixed_requests(ms=(5, 12, 30), reps=1)]
+    nofuse.flush()
+    for f in futs:
+        f.result(timeout=120.0)
+    nofuse.drain()
+    snap = nofuse.metrics.snapshot()
+    assert snap["fused_flushes"] == 0
+    assert snap["n_flushes"] == 3
+    assert snap["flush_reasons"] == {"manual": 3}
+    nofuse.close()
+
+
+def test_fused_policy_allow_fuse_veto():
+    """A 3-tuple bucket policy's allow_fuse=False keeps that bucket out
+    of fused units while others still fuse."""
+    spec = SolverSpec(backend="rgb", tile=8)
+    sched = BatchScheduler(spec, max_batch=64, max_wait_s=60.0)
+    sched.set_bucket_policy(
+        lambda bm: (64, 60.0, bm != 8))   # bucket 8 must fly solo
+    futs = [sched.submit(*r) for r in
+            _mixed_requests(ms=(5, 12, 30), reps=1)]
+    sched.flush()
+    for f in futs:
+        f.result(timeout=120.0)
+    sched.drain()
+    snap = sched.metrics.snapshot()
+    # 16 + 32 fused; 8 flushed alone despite being fusable by ratio
+    assert snap["n_flushes"] == 2
+    assert snap["fused_flushes"] == 1 and snap["fused_buckets"] == 2
+    sched.close()
+
+
+def test_fused_flush_buffer_pool_audit():
+    """Fused units lease/release flush buffers with the same
+    no-double-lease discipline as plain flushes."""
+    spec = SolverSpec(backend="rgb", tile=8)
+    sched = BatchScheduler(spec, max_batch=16, max_wait_s=60.0)
+    sched.buffers = _AuditPool()
+    futs = []
+    for rep in range(3):
+        futs += [sched.submit(*r) for r in
+                 _mixed_requests(seed=rep, ms=(3, 5, 12, 14), reps=2)]
+        sched.flush()
+    for f in futs:
+        f.result(timeout=120.0)
+    sched.drain()
+    assert sched.buffers.violations == 0
+    assert sched.buffers.lease_count == \
+        sched.metrics.snapshot()["n_flushes"]
+    assert sched.metrics.snapshot()["fused_flushes"] >= 1
+    sched.close()
+
+
+def test_pmap_escape_hatch_roundtrip():
+    """sharding="pmap" stays green: the legacy path solves the same
+    traffic bit-identically (single local device here; CI re-runs this
+    under 4 forced host devices)."""
+    spec = SolverSpec(backend="rgb", tile=8)
+    sched = BatchScheduler(spec, max_batch=1000, sharding="pmap")
+    assert not sched.fuse   # pmap's even split predates fused units
+    assert sched.batch_unit == 8 * sched.n_devices
+    reqs = _mixed_requests(ms=(3, 8, 37, 130), reps=2)
+    futs = [sched.submit(*r) for r in reqs]
+    sched.flush()
+    for (A, b, c), f in zip(reqs, futs):
+        r = f.result(timeout=120.0)
+        d = _direct_solve(spec, A, b, c)
+        assert bool(d.feasible[0]) == r.feasible
+        np.testing.assert_array_equal(np.asarray(d.x[0]), r.x)
+    sched.drain()
+    assert sched.metrics.snapshot()["fused_flushes"] == 0
+    sched.close()
+    with pytest.raises(ValueError, match="sharding"):
+        BatchScheduler(spec, sharding="banana")
+
+
 # -- multi-device sharding (out-of-process, forced host devices) ---------
 
 def test_sharded_matches_single_device(multidevice):
@@ -746,3 +989,179 @@ print("sharded-ok", len(reqs))
 """
     out = multidevice(code, n_devices=4)
     assert "sharded-ok 16" in out
+
+
+def test_mesh_vs_pmap_bit_identity(multidevice):
+    """The tentpole equivalence claim: over an adversarial packed batch
+    (ragged + infeasible + degenerate rows), the shard_map mesh path,
+    the legacy pmap path and a plain single-launch jit produce
+    bit-identical results on 4 devices."""
+    code = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import concat_batches, make_batch, ragged_feasible_lp
+from repro.core.packed import pack
+from repro.serve_lp import ExecSpec, SolverSpec, build_executable
+from repro.solver import solve_with_spec
+assert len(jax.devices()) == 4
+rng = np.random.default_rng(7)
+batches = [ragged_feasible_lp(jax.random.key(0), 20, 24, m_min=2)]
+# infeasible rows: two opposed halfplanes
+A = np.array([[1.0, 0.0], [-1.0, 0.0], [0.0, 1.0]], np.float32)
+b = np.array([-1.0, -1.0, 5.0], np.float32)
+batches.append(make_batch(A, b, np.array([1.0, 0.5], np.float32)))
+# degenerate: every constraint tight at one point
+th = rng.uniform(0, 2 * np.pi, 24).astype(np.float32)
+Ad = np.stack([np.cos(th), np.sin(th)], -1).astype(np.float32)
+x0 = rng.uniform(-5, 5, 2).astype(np.float32)
+batches.append(make_batch(Ad, Ad @ x0, np.array([0.0, 1.0], np.float32)))
+lp = concat_batches(batches)
+pb = pack(lp, m_pad=32)
+B = int(pb.L.shape[0])
+assert B == 22
+# pad to the pmap-legal rung so all three paths take identical input
+pad = 64 - B
+Lp = np.zeros((pad, 4, 32), np.float32); Lp[:, 2, :] = 1e9
+L = np.concatenate([np.asarray(pb.L), Lp])
+c = np.concatenate([np.asarray(pb.c),
+                    np.tile(np.array([[1.0, 0.0]], np.float32),
+                            (pad, 1))])
+mv = np.concatenate([np.asarray(pb.m_valid),
+                     np.zeros((pad, 1), np.int32)])
+solver = SolverSpec(backend="rgb", tile=16)
+mesh_exe = build_executable(
+    ExecSpec(bucket_m=32, b_pad=64, solver=solver, n_devices=4),
+    jax.devices())
+pmap_exe = build_executable(
+    ExecSpec(bucket_m=32, b_pad=64, solver=solver, sharding="pmap",
+             n_devices=4),
+    jax.devices())
+assert mesh_exe.shards == (16, 16, 16, 16)
+assert pmap_exe.shards == (16, 16, 16, 16)
+xm, fm = mesh_exe(L, c, mv)
+xp, fp = pmap_exe(L, c, mv)
+from repro.core.packed import PackedLPBatch
+ref = solve_with_spec(dataclasses.replace(solver),
+                      PackedLPBatch(L=jnp.asarray(L), c=jnp.asarray(c),
+                                    m_valid=jnp.asarray(mv)))
+np.testing.assert_array_equal(xm, xp)
+np.testing.assert_array_equal(fm, fp)
+np.testing.assert_array_equal(xm, np.asarray(ref.x))
+np.testing.assert_array_equal(fm, np.asarray(ref.feasible))
+assert fm[:B].sum() == 21   # the one infeasible row stayed infeasible
+print("identity-ok", B)
+"""
+    out = multidevice(code, n_devices=4)
+    assert "identity-ok 22" in out
+
+
+def test_uneven_shards_match_reference(multidevice):
+    """5 tiles over 4 devices: a two-group uneven layout (32+16+16+16)
+    solves to exactly what a single plain-jit launch produces."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ragged_feasible_lp
+from repro.core.packed import pack
+from repro.serve_lp import ExecSpec, SolverSpec, build_executable
+from repro.solver import solve_with_spec
+assert len(jax.devices()) == 4
+lp = ragged_feasible_lp(jax.random.key(5), 80, 24, m_min=2)
+pb = pack(lp, m_pad=32)
+L, c, mv = (np.asarray(pb.L), np.asarray(pb.c), np.asarray(pb.m_valid))
+solver = SolverSpec(backend="rgb", tile=16)
+exe = build_executable(
+    ExecSpec(bucket_m=32, b_pad=80, solver=solver, n_devices=4),
+    jax.devices())
+assert exe.layout.shards == (32, 16, 16, 16)
+assert exe.n_launches == 2
+x, feas = exe(L, c, mv)
+from repro.core.packed import PackedLPBatch
+ref = solve_with_spec(solver, PackedLPBatch(
+    L=jnp.asarray(L), c=jnp.asarray(c), m_valid=jnp.asarray(mv)))
+np.testing.assert_array_equal(x, np.asarray(ref.x))
+np.testing.assert_array_equal(feas, np.asarray(ref.feasible))
+assert feas.all() and x.shape == (80, 2)
+print("uneven-ok", exe.layout.describe())
+"""
+    out = multidevice(code, n_devices=4)
+    assert "uneven-ok 80 rows = [32 16 16 16] @ tile=16, 2 launches" \
+        in out
+
+
+def test_prime_sized_flush_on_four_devices(multidevice):
+    """Regression for the silent whole-shard requirement: a prime-sized
+    flush (b_pad=37) on 4 devices builds, pads to whole tiles inside
+    the executable, and returns exactly 37 trimmed rows."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ragged_feasible_lp
+from repro.core.packed import pack
+from repro.serve_lp import ExecSpec, SolverSpec, build_executable
+from repro.solver import solve_with_spec
+assert len(jax.devices()) == 4
+lp = ragged_feasible_lp(jax.random.key(11), 37, 24, m_min=2)
+pb = pack(lp, m_pad=32)
+L, c, mv = (np.asarray(pb.L), np.asarray(pb.c), np.asarray(pb.m_valid))
+solver = SolverSpec(backend="rgb", tile=16)
+exe = build_executable(
+    ExecSpec(bucket_m=32, b_pad=37, solver=solver, n_devices=4),
+    jax.devices())
+# ceil(37/16)=3 tiles: one per device, fourth device unused, 11 pad
+# rows -- not the 27 pad rows a whole 16*4 block would cost
+assert exe.layout.shards == (16, 16, 16, 0)
+assert exe.layout.pad_rows(37) == 11
+x, feas = exe(L, c, mv)
+assert x.shape == (37, 2) and feas.shape == (37,)
+from repro.core.packed import PackedLPBatch
+ref = solve_with_spec(solver, PackedLPBatch(
+    L=jnp.asarray(L), c=jnp.asarray(c), m_valid=jnp.asarray(mv)))
+np.testing.assert_array_equal(x, np.asarray(ref.x))
+np.testing.assert_array_equal(feas, np.asarray(ref.feasible))
+assert feas.all()
+print("prime-ok", int(feas.sum()))
+"""
+    out = multidevice(code, n_devices=4)
+    assert "prime-ok 37" in out
+
+
+def test_fused_scheduler_multidevice(multidevice):
+    """End-to-end fused serving on a real 4-device mesh: heterogeneous
+    underfull buckets fuse into shared launches, results stay
+    bit-identical to direct solves, and unused devices carry no rows."""
+    code = """
+import jax, numpy as np
+from repro.core import make_batch
+from repro.serve_lp import BatchScheduler, SolverSpec
+from repro.solver import get_solver
+assert len(jax.devices()) == 4
+spec = SolverSpec(backend="rgb", tile=8)
+sched = BatchScheduler(spec, max_batch=64, max_wait_s=60.0)
+rng = np.random.default_rng(2)
+reqs = []
+for m in (3, 5, 12, 14, 30, 60) * 2:
+    theta = rng.uniform(0, 2 * np.pi, m)
+    A = np.stack([np.cos(theta), np.sin(theta)], -1).astype(np.float32)
+    b = (A @ rng.uniform(-5, 5, 2) + rng.uniform(0.1, 2, m)).astype(
+        np.float32)
+    reqs.append((A, b, np.array([1.0, 0.5], np.float32)))
+futs = [sched.submit(*r) for r in reqs]
+sched.flush()
+solver = get_solver(spec)
+for (A, b, c), f in zip(reqs, futs):
+    r = f.result(timeout=120.0)
+    d = solver.solve(make_batch(A, b, c))
+    assert bool(d.feasible[0]) == r.feasible
+    np.testing.assert_array_equal(np.asarray(d.x[0]), r.x)
+sched.drain()
+snap = sched.metrics.snapshot()
+assert snap["fused_flushes"] == 1 and snap["fused_buckets"] == 4
+assert snap["launches_total"] >= 1
+assert len(snap["rows_per_device"]) == 4
+# 12 fused reqs pad to b_pad=16 (two 8-row tiles), spread over two
+# devices; the other two devices carry no rows
+assert sum(snap["rows_per_device"]) == 16
+assert snap["rows_per_device"].count(0) == 2
+print("fused-mesh-ok", snap["rows_per_device"])
+"""
+    out = multidevice(code, n_devices=4)
+    assert "fused-mesh-ok" in out

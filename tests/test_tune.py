@@ -25,8 +25,9 @@ def _key(device="cpu", backend="rgb", dtype="float32", m_bucket=32,
     return TableKey(device, backend, dtype, m_bucket, batch_bucket)
 
 
-def _entry(tile=16, chunk=64, us=1.0, **kw):
-    return TableEntry(_key(**kw), tile=tile, chunk=chunk, us_per_lp=us)
+def _entry(tile=16, chunk=64, us=1.0, us_iqr=0.0, k=1, **kw):
+    return TableEntry(_key(**kw), tile=tile, chunk=chunk, us_per_lp=us,
+                      us_iqr=us_iqr, k=k)
 
 
 # -- table semantics ------------------------------------------------------
@@ -96,6 +97,91 @@ def test_table_merge_keeps_faster():
     # disjoint keys union
     other = TuningTable([_entry(m_bucket=64, tile=32, us=1.0)])
     assert len(fast.merge(other)) == 2
+
+
+def test_table_merge_rejects_improvements_inside_noise_band():
+    """A candidate faster by less than the recorded spread is noise,
+    not an improvement: the incumbent stays.  The dead zone is the
+    larger of the two entries' IQRs."""
+    incumbent = TuningTable([_entry(tile=16, us=10.0, us_iqr=2.0, k=5)])
+    # 9.0 is faster, but only by 1.0 < the 2.0 noise band
+    incumbent.merge(TuningTable([_entry(tile=8, us=9.0, us_iqr=0.1,
+                                        k=5)]))
+    assert incumbent.get(_key()).tile == 16
+    # the challenger's own spread also widens the band
+    incumbent.merge(TuningTable([_entry(tile=8, us=8.5, us_iqr=3.0,
+                                        k=5)]))
+    assert incumbent.get(_key()).tile == 16
+    # a win beyond the band replaces
+    incumbent.merge(TuningTable([_entry(tile=8, us=7.5, us_iqr=0.1,
+                                        k=5)]))
+    assert incumbent.get(_key()).tile == 8
+    assert incumbent.get(_key()).us_per_lp == 7.5
+    # zero recorded spread degrades to the old strictly-faster rule
+    legacy = TuningTable([_entry(tile=16, us=10.0)])
+    legacy.merge(TuningTable([_entry(tile=8, us=9.99)]))
+    assert legacy.get(_key()).tile == 8
+
+
+def test_table_merge_measured_vs_seed_precedence():
+    """Measured entries always replace heuristic seeds (whatever the
+    timings claim) and seeds never replace measurements."""
+    seed = _entry(tile=32, us=0.001)
+    seed = TableEntry(seed.key, tile=32, chunk=64, us_per_lp=0.001,
+                      source="heuristic-seed")
+    t = TuningTable([seed])
+    # a much "slower" measured entry still wins over the seed sentinel
+    t.merge(TuningTable([_entry(tile=8, us=100.0, us_iqr=5.0, k=3)]))
+    assert t.get(_key()).source == "measured"
+    assert t.get(_key()).tile == 8
+    # and the seed cannot claw its way back
+    t.merge(TuningTable([seed]))
+    assert t.get(_key()).source == "measured"
+
+
+def test_entry_stats_fields_and_json_roundtrip(tmp_path):
+    """(median, iqr, k) ride along in the table: validated, persisted,
+    and defaulted when loading rows written before the stats slice."""
+    e = _entry(us=2.0, us_iqr=0.25, k=7)
+    assert e.noise_band_us == 0.25
+    with pytest.raises(ValueError):
+        _entry(us_iqr=-0.1)
+    with pytest.raises(ValueError):
+        _entry(k=0)
+    t = TuningTable([e])
+    p = t.save(tmp_path / "stats.json")
+    back = TuningTable.load(p)
+    got = back.get(_key())
+    assert (got.us_iqr, got.k) == (0.25, 7)
+    assert back == t
+    # same schema version: rows written without the stats fields load
+    # with (0.0, 1) defaults instead of failing the version check
+    doc = json.loads(p.read_text())
+    assert doc["version"] == SCHEMA_VERSION
+    for row in doc["entries"]:
+        del row["us_iqr"], row["k"]
+    legacy = TuningTable.from_json(doc)
+    got = legacy.get(_key())
+    assert (got.us_iqr, got.k) == (0.0, 1)
+
+
+def test_measure_stats_and_tune_record_spread():
+    """measure_stats returns (median, iqr, k) and the tuner threads
+    the spread through TuneResult into table entries."""
+    from repro.tune import measure_stats
+    pb = representative_batch(16, 8)
+    solver = SolverSpec(backend="rgb", tile=8, chunk=0).build()
+    med, iqr, k = measure_stats(solver.solve, pb, warmup=1, iters=5)
+    assert med > 0.0 and iqr >= 0.0 and k == 5
+    # a single repetition has no spread by definition
+    _, iqr1, k1 = measure_stats(solver.solve, pb, warmup=0, iters=1)
+    assert iqr1 == 0.0 and k1 == 1
+    results = tune_shape(16, 8, backends=("rgb",), warmup=1, iters=3)
+    assert all(r.k == 3 and r.iqr_seconds >= 0.0 for r in results)
+    (entry,) = results_to_entries(results)
+    winner = results[0]
+    assert entry.k == 3
+    assert entry.us_iqr == pytest.approx(winner.us_iqr)
 
 
 def test_table_json_roundtrip(tmp_path):
