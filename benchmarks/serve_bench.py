@@ -11,6 +11,12 @@ line each with launch counts, pad-waste fractions and the per-device
 row totals.  Run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to see the
 multi-device layouts on a CPU host.
+
+The burst profiles run under a ``repro.obs`` tracer, so their
+``idle_frac`` numbers are *measured* from per-device ``device.solve``
+spans (union of solve intervals per device over the traffic window)
+rather than the old host-side ``device_idle_s_est`` gauge; the traced
+rows carry the measurement in their ``JSON`` line.
 """
 from __future__ import annotations
 
@@ -39,10 +45,12 @@ def run(full: bool = False) -> None:
     # solves buys (inflight/overlap/idle come from the new gauges).
     burst = smoke_config()
     burst.open_loop = True
+    burst.trace = True
     profiles["serve_burst_pipelined"] = burst
     stopgo = smoke_config()
     stopgo.open_loop = True
     stopgo.pipeline = False
+    stopgo.trace = True
     profiles["serve_burst_stopgo"] = stopgo
     if full:
         profiles["serve_open_loop"] = BenchConfig(
@@ -76,6 +84,20 @@ def run(full: bool = False) -> None:
             }
             shard_rows[cfg.sharding] = row
             print("JSON " + json.dumps(row), flush=True)
+        if "device_idle_frac" in snap:
+            # Measured from device.solve spans (traced profile) —
+            # supersedes the host-side estimate.
+            idle = f"|idle_frac={snap['device_idle_frac']:.3f}"
+            print("JSON " + json.dumps({
+                "profile": name,
+                "device_idle_frac": round(snap["device_idle_frac"], 4),
+                "device_busy_s": round(snap["device_busy_s"], 4),
+                "device_window_s": round(snap["device_window_s"], 4),
+                "device_tracks": snap["device_tracks"],
+                "trace_spans": snap["trace_spans"],
+            }), flush=True)
+        else:
+            idle = f"|idle_s={snap['device_idle_s_est']:.3f}"
         emit(name, snap["latency_mean_ms"] / 1e3,
              f"lps={snap['throughput_lps']:.1f}"
              f"|p50ms={snap['latency_p50_ms']:.2f}"
@@ -84,7 +106,7 @@ def run(full: bool = False) -> None:
              f"|cache_hit={snap['cache']['hit_rate']:.3f}"
              f"|inflight_max={snap['inflight_max']}"
              f"|overlapped={snap['overlapped_dispatches']}"
-             f"|idle_s={snap['device_idle_s_est']:.3f}"
+             + idle +
              f"|launches={snap['launches_total']}"
              f"|fused={snap['fused_flushes']}")
     if len(shard_rows) == 2:

@@ -47,4 +47,12 @@ export JAX_DEFAULT_DTYPE_BITS="${JAX_DEFAULT_DTYPE_BITS:-32}"
 cd "$(dirname "$0")/.."
 export PYTHONPATH="${PYTHONPATH:+$PYTHONPATH:}$(pwd)/src"
 
-exec /usr/bin/env python3 -m repro.serve_lp.rpc "$@"
+# Containers log to collectors, not humans: default to structured JSON
+# lines (one object per line, trace_id/tenant bound from the request
+# context).  A caller passing its own --log-format wins.
+LOG_FORMAT_ARGS=(--log-format json)
+for arg in "$@"; do
+    [[ "$arg" == --log-format* ]] && LOG_FORMAT_ARGS=()
+done
+
+exec /usr/bin/env python3 -m repro.serve_lp.rpc "${LOG_FORMAT_ARGS[@]}" "$@"

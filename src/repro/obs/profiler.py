@@ -1,0 +1,89 @@
+"""Opt-in jax.profiler hooks that line device traces up with host spans.
+
+Two thin wrappers, both import-gated so the obs package never drags
+jax in (and keeps working when jax is absent):
+
+* :func:`annotation` — a context manager emitting a
+  ``jax.profiler.TraceAnnotation`` named like the host span, so the
+  per-launch dispatch shows up as a labelled region in a device
+  profile.  Falls back to a null context when jax (or the profiler)
+  is unavailable.
+* :class:`ProfileSession` — ``jax.profiler.start_trace`` /
+  ``stop_trace`` bracketing for a whole bench run
+  (``--jax-profile-dir``), tolerant of double-stops and missing jax.
+
+Caveat (documented in the README): on CPU backends the device
+"profile" is host threads running compiled XLA code — annotations
+still nest correctly, but there is no hardware timeline to align
+against; treat CPU profiles as structural, not quantitative.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator, Optional
+
+try:  # pragma: no cover - exercised only when jax present (it is in CI)
+    import jax.profiler as _jax_profiler
+except Exception:  # pragma: no cover
+    _jax_profiler = None
+
+
+def available() -> bool:
+    return _jax_profiler is not None
+
+
+@contextlib.contextmanager
+def annotation(name: str) -> Iterator[None]:
+    """``jax.profiler.TraceAnnotation(name)`` when jax is importable,
+    else a no-op block."""
+    if _jax_profiler is None:
+        yield
+        return
+    try:
+        cm: Any = _jax_profiler.TraceAnnotation(name)
+    except Exception:
+        yield
+        return
+    with cm:
+        yield
+
+
+class ProfileSession:
+    """Start/stop a jax profiler trace around a run.
+
+    ``ProfileSession(log_dir).start()`` is a no-op (returning False)
+    when jax or its profiler is unavailable; ``stop()`` tolerates
+    never-started and double-stop so shutdown paths can call it
+    unconditionally.
+    """
+
+    def __init__(self, log_dir: Optional[str]):
+        self.log_dir = log_dir
+        self.active = False
+
+    def start(self) -> bool:
+        if not self.log_dir or _jax_profiler is None or self.active:
+            return False
+        try:
+            _jax_profiler.start_trace(self.log_dir)
+        except Exception:
+            return False
+        self.active = True
+        return True
+
+    def stop(self) -> bool:
+        if not self.active:
+            return False
+        self.active = False
+        try:
+            _jax_profiler.stop_trace()
+        except Exception:
+            return False
+        return True
+
+    def __enter__(self) -> "ProfileSession":
+        self.start()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()

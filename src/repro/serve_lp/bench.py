@@ -21,8 +21,23 @@ cross-bucket fusing; pmap is the legacy escape hatch), and
 ``--assert-fused`` turns "underfull buckets actually fused into shared
 launches" into a hard check (used by CI).
 
+``--trace-out trace.json`` runs the traffic under a ``repro.obs``
+tracer and writes the span ring as Chrome ``trace_event`` JSON
+(load it at ui.perfetto.dev); the report's ``device_idle_frac`` /
+``device_idle_s`` then come *measured* from the per-device
+``device.solve`` spans instead of the host-side estimate.
+``--assert-trace`` additionally hard-fails unless every completed
+request has its full submit->scatter span chain and at least two
+devices show non-empty ``device.solve`` tracks (CI runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``).  Without
+tracing the bench asserts the scheduler's span path stayed a no-op
+(``spans_recorded == 0``) — the observability layer must cost nothing
+when off.
+
     python -m repro.serve_lp.bench --smoke
     python -m repro.serve_lp.bench --smoke --open-loop --assert-overlap
+    python -m repro.serve_lp.bench --smoke --open-loop \
+        --trace-out trace.json --assert-trace
     python -m repro.serve_lp.bench --requests 2000 --rate 5000 \
         --method kernel --max-batch 128
 """
@@ -70,6 +85,9 @@ class BenchConfig:
     rpc_target_p99_ms: Optional[float] = None   # enable SLO controller
     rpc_p99_bound_ms: float = 2500.0            # --assert-rpc bound
     assert_rpc: bool = False      # enforce p99 + shed-rate bounds
+    trace: bool = False           # run under a repro.obs tracer
+    trace_out: Optional[str] = None   # write Chrome trace JSON here
+    assert_trace: bool = False    # enforce span chains + >=2 dev tracks
 
 
 def smoke_config() -> BenchConfig:
@@ -167,13 +185,25 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
                 ) -> Tuple[Dict, BatchScheduler]:
     spec = SolverSpec(backend=cfg.method, tile=cfg.tile, chunk=cfg.chunk,
                       interpret=cfg.interpret)
+    traced = cfg.trace or cfg.trace_out is not None or cfg.assert_trace
+    tracer = None
+    if traced:
+        from repro.obs import Tracer
+        # Ring sized so a full smoke run (6 spans per request upper
+        # bound) survives without wraparound — dropped spans would break
+        # the --assert-trace chain check.
+        tracer = Tracer(enabled=True,
+                        capacity=max(16384, 8 * cfg.requests))
     sched = BatchScheduler(spec, max_batch=cfg.max_batch,
                            max_wait_s=cfg.max_wait_s,
                            pipeline=cfg.pipeline,
                            max_inflight=cfg.max_inflight,
-                           sharding=cfg.sharding)
+                           sharding=cfg.sharding,
+                           tracer=tracer)
     if cfg.warmup:
         _warmup(cfg, sched, quiet)
+        if traced:
+            sched.tracer.buffer.clear()   # measured phase only
     futures: List = []
     t_wall0 = time.perf_counter()
     with sched:
@@ -196,6 +226,16 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
     snap = sched.metrics.snapshot(sched.cache.stats())
     snap["wall_s"] = wall
     snap["n_feasible"] = sum(r.feasible for r in results)
+    if traced:
+        snap.update(_trace_report(cfg, sched, quiet))
+    else:
+        # The no-trace contract: with tracing off the scheduler's span
+        # path must be a pure no-op — nothing ever committed to a ring.
+        stats = sched.tracer.stats()
+        assert stats["spans_recorded"] == 0, (
+            "tracing disabled but the scheduler recorded "
+            f"{stats['spans_recorded']} spans; the no-trace path is "
+            "not free")
     if not quiet:
         print(f"[serve_lp.bench] {cfg.requests} requests "
               f"({snap['n_feasible']} feasible) wall={wall:.2f}s "
@@ -231,6 +271,60 @@ def run_traffic(cfg: BenchConfig, *, quiet: bool = False
                   f"fused flushes covering {snap['fused_buckets']} "
                   "buckets")
     return snap, sched
+
+
+def _trace_report(cfg: BenchConfig, sched: BatchScheduler,
+                  quiet: bool) -> Dict:
+    """Post-run span analysis: write the Chrome trace, measure device
+    idleness from the ``device.solve`` tracks, and (``--assert-trace``)
+    enforce the full-chain + multi-device contract."""
+    from repro.obs import check_span_chains, device_idle
+    from repro.obs.export import write_chrome_trace
+    spans = sched.tracer.spans()
+    chains = check_span_chains(spans)
+    idle = device_idle(spans)
+    if cfg.trace_out:
+        write_chrome_trace(spans, cfg.trace_out)
+        if not quiet:
+            print(f"[serve_lp.bench] wrote {len(spans)} spans to "
+                  f"{cfg.trace_out} (load at ui.perfetto.dev)")
+    dev_tracks = {d: v["n_solves"] for d, v in idle["devices"].items()
+                  if v["n_solves"] > 0}
+    if not quiet:
+        print(f"[serve_lp.bench] trace: {chains['complete']} complete "
+              f"request chains over {chains['flushes']} flushes, "
+              f"{len(chains['problems'])} problems; measured device "
+              f"idle {100 * idle['idle_frac']:.1f}% over "
+              f"{len(dev_tracks)} device tracks")
+    if cfg.assert_trace:
+        assert chains["complete"] >= cfg.requests, (
+            f"only {chains['complete']} of {cfg.requests} completed "
+            "requests have request spans in the ring "
+            f"(dropped={sched.tracer.stats()['ring_dropped']})")
+        assert not chains["problems"], (
+            "span chains incomplete or mis-ordered: "
+            + "; ".join(chains["problems"][:5]))
+        assert len(dev_tracks) >= 2, (
+            f"only {len(dev_tracks)} device(s) show device.solve "
+            "tracks; run under XLA_FLAGS="
+            "--xla_force_host_platform_device_count=4 (or on a "
+            "multi-device host) for --assert-trace")
+        if not quiet:
+            print(f"[serve_lp.bench] trace ok: all {cfg.requests} "
+                  f"chains complete, {len(dev_tracks)} device tracks "
+                  "non-empty")
+    return {
+        # Measured from per-device solve spans — supersedes the
+        # host-side device_idle_s_est gauge when tracing is on.
+        "device_idle_frac": idle["idle_frac"],
+        "device_idle_s": idle["idle_s"],
+        "device_busy_s": idle["busy_s"],
+        "device_window_s": idle["window_s"],
+        "device_tracks": dev_tracks,
+        "trace_complete_chains": chains["complete"],
+        "trace_problems": len(chains["problems"]),
+        "trace_spans": len(spans),
+    }
 
 
 def _check_against_direct(cfg: BenchConfig, results: List) -> None:
@@ -521,6 +615,16 @@ def main(argv=None) -> None:
     ap.add_argument("--assert-fused", action="store_true",
                     help="fail unless >=1 flush fused multiple "
                          "m-buckets into one launch (mesh only)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run under a repro.obs tracer (measured "
+                         "device-idle numbers in the report)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the span ring as Chrome trace_event "
+                         "JSON to PATH (implies --trace)")
+    ap.add_argument("--assert-trace", action="store_true",
+                    help="fail unless every completed request has its "
+                         "full span chain and >=2 devices show "
+                         "device.solve tracks (implies --trace)")
     ap.add_argument("--rpc", action="store_true",
                     help="drive the HTTP front end (closed-loop latency "
                          "phase + open-loop overload phase + /metrics "
@@ -557,6 +661,9 @@ def main(argv=None) -> None:
     cfg.assert_overlap = args.assert_overlap
     cfg.sharding = args.sharding
     cfg.assert_fused = args.assert_fused
+    cfg.trace = args.trace
+    cfg.trace_out = args.trace_out
+    cfg.assert_trace = args.assert_trace
     cfg.rpc = args.rpc
     cfg.rpc_clients = args.rpc_clients
     cfg.rpc_burst = args.rpc_burst

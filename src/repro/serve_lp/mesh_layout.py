@@ -81,6 +81,13 @@ class LaunchGroup:
         row: ``offset + d * rows_per_device + r``."""
         return (self.rows_per_device, 1)
 
+    @property
+    def device_indices(self) -> Tuple[int, ...]:
+        """The global device indices this group's launch runs on —
+        what a per-launch ``device.solve`` span reports as its device
+        track membership."""
+        return tuple(range(self.start, self.start + self.n_devices))
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshLayout:

@@ -10,6 +10,8 @@ import argparse
 import asyncio
 import os
 
+from repro.obs import FlightRecorder, Tracer, setup_logging
+from repro.obs.profiler import ProfileSession
 from repro.serve_lp.rpc.admission import AdmissionPolicy
 from repro.serve_lp.rpc.quota import QuotaManager
 from repro.serve_lp.rpc.server import RpcServer, make_frontend
@@ -73,7 +75,42 @@ def main(argv=None) -> None:
                     help="per-tenant sustained LPs/s")
     ap.add_argument("--quota-burst", type=float, default=2_000.0,
                     help="per-tenant instantaneous LP burst")
+    ap.add_argument("--log-format", default="text",
+                    choices=("text", "json"),
+                    help="stdout log format; json emits one structured "
+                         "object per line with trace_id/tenant from "
+                         "the active request context")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable end-to-end span tracing (repro.obs); "
+                         "spans are pullable at GET /debug/trace")
+    ap.add_argument("--trace-capacity", type=int, default=16384,
+                    help="span ring-buffer capacity (with --trace)")
+    ap.add_argument("--flight-spool", default=None, metavar="DIR",
+                    help="enable the flight recorder: dump ring + "
+                         "scheduler state to DIR on errors / SLO "
+                         "violations, browsable at GET /debug/flight")
+    ap.add_argument("--flight-p99-ms", type=float, default=None,
+                    help="also snapshot when request p99 exceeds this "
+                         "(needs --flight-spool)")
+    ap.add_argument("--jax-profile-dir", default=None, metavar="DIR",
+                    help="run a jax.profiler session into DIR for the "
+                         "server's lifetime and annotate each device "
+                         "launch with its flush label")
     args = ap.parse_args(argv)
+
+    setup_logging(fmt=args.log_format)
+
+    tracer = None
+    if args.trace or args.jax_profile_dir:
+        tracer = Tracer(enabled=True, capacity=args.trace_capacity,
+                        annotate_device=bool(args.jax_profile_dir))
+    recorder = None
+    if args.flight_spool:
+        recorder = FlightRecorder(
+            args.flight_spool, tracer=tracer,
+            p99_threshold_s=(args.flight_p99_ms / 1e3
+                             if args.flight_p99_ms is not None
+                             else None))
 
     frontend = make_frontend(
         SolverSpec(backend=args.method),
@@ -89,16 +126,27 @@ def main(argv=None) -> None:
                             burst=args.quota_burst),
         target_p99_s=(args.target_p99_ms / 1e3
                       if args.target_p99_ms is not None else None),
+        tracer=tracer,
+        recorder=recorder,
     )
+
+    profile = (ProfileSession(args.jax_profile_dir)
+               if args.jax_profile_dir else None)
+    if profile is not None:
+        profile.start()
 
     async def _serve():
         server = RpcServer(frontend, args.host, args.port)
         await server.start()
         slo = ("off" if frontend.slo is None
                else f"p99<={args.target_p99_ms:.0f}ms")
+        obs = "trace" if tracer is not None else "no-trace"
+        if recorder is not None:
+            obs += f"+flight:{args.flight_spool}"
         print(f"[serve_lp.rpc] listening on http://{args.host}:"
               f"{server.port}  backend={args.method} "
-              f"devices={frontend.scheduler.n_devices} slo={slo}",
+              f"devices={frontend.scheduler.n_devices} slo={slo} "
+              f"obs={obs}",
               flush=True)
         try:
             await server.serve_forever()
@@ -109,6 +157,9 @@ def main(argv=None) -> None:
         asyncio.run(_serve())
     except KeyboardInterrupt:
         pass
+    finally:
+        if profile is not None:
+            profile.stop()
 
 
 if __name__ == "__main__":

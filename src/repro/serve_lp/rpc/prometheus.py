@@ -15,11 +15,36 @@ Two format obligations are enforced here:
   suspenders);
 * label values are escaped per the exposition spec (backslash, quote,
   newline).
+
+Histograms: the four duration families recorded by ``ServeMetrics``
+(request latency, queue wait, solve, flush) render in the real
+Prometheus histogram representation — cumulative ``_bucket{le=...}``
+lines, ``_sum`` and ``_count`` — instead of only percentile gauges, so
+scrapes can be aggregated across servers and over time.  The latency
+families additionally carry OpenMetrics-style *exemplars*
+(``... # {trace_id="..."} value``) naming the last trace id observed
+in each bucket: a dashboard's p99 spike links straight to a pullable
+``/debug/trace?trace_id=``.  (Exposition 0.0.4 parsers that predate
+exemplars simply treat the `` # {...}`` suffix as one more value
+token; Prometheus itself has parsed the form since 2.26.)
 """
 from __future__ import annotations
 
 import math
 from typing import Dict, List, Optional, Tuple
+
+# Human blurbs for the histogram families exported by ServeMetrics.
+_HIST_HELP = {
+    "request_latency_seconds":
+        "Submit-to-result latency per request (histogram)",
+    "queue_wait_seconds":
+        "Submit-to-flush-assembly queue wait per request (histogram)",
+    "solve_duration_seconds":
+        "Dispatch-to-complete device service time per flush "
+        "(histogram)",
+    "flush_duration_seconds":
+        "Assembly-start-to-complete duration per flush (histogram)",
+}
 
 CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
@@ -57,6 +82,33 @@ class _Writer:
     def scalar(self, name: str, kind: str, help_: str, value) -> None:
         self.family(name, kind, help_, [({}, value)])
 
+    def histogram(self, name: str, help_: str, state: Dict,
+                  exemplars: bool = True) -> None:
+        """One histogram family from a ``_Histogram.state()`` dict:
+        cumulative ``_bucket{le=...}`` lines (exemplar-suffixed where
+        one was captured), then ``_sum`` and ``_count``."""
+        full = f"{self.prefix}_{name}"
+        self.lines.append(f"# HELP {full} {help_}")
+        self.lines.append(f"# TYPE {full} histogram")
+        bounds = state["bounds"]
+        cum = state["cumulative"]
+        ex = state.get("exemplars") or {}
+        for i, b in enumerate(bounds):
+            le = f"{float(b):.12g}"
+            line = f'{full}_bucket{{le="{le}"}} {int(cum[i])}'
+            e = ex.get(i, ex.get(str(i)))
+            if exemplars and e:
+                line += (f' # {{trace_id="{_escape(e[1])}"}} '
+                         f'{_finite(e[0])}')
+            self.lines.append(line)
+        line = f'{full}_bucket{{le="+Inf"}} {int(cum[-1])}'
+        e = ex.get(len(bounds), ex.get(str(len(bounds))))
+        if exemplars and e:
+            line += f' # {{trace_id="{_escape(e[1])}"}} {_finite(e[0])}'
+        self.lines.append(line)
+        self.lines.append(f"{full}_sum {_finite(state['sum'])}")
+        self.lines.append(f"{full}_count {int(state['count'])}")
+
     def render(self) -> str:
         return "\n".join(self.lines) + "\n"
 
@@ -65,6 +117,7 @@ def render_metrics(snapshot: Dict, *,
                    rpc: Optional[Dict] = None,
                    quotas: Optional[Dict] = None,
                    slo: Optional[Dict] = None,
+                   trace: Optional[Dict] = None,
                    prefix: str = "repro_serve") -> str:
     """The full scrape body: scheduler snapshot + RPC counters.
 
@@ -72,7 +125,7 @@ def render_metrics(snapshot: Dict, *,
     :meth:`~repro.serve_lp.rpc.server.RpcCounters.snapshot`; ``quotas``
     is :meth:`~repro.serve_lp.rpc.quota.QuotaManager.snapshot`;
     ``slo`` is :meth:`~repro.serve_lp.rpc.slo.SLOController.plans`
-    (``{bucket_m: BucketPlan}``).
+    (``{bucket_m: BucketPlan}``); ``trace`` is ``Tracer.stats()``.
     """
     w = _Writer(prefix)
 
@@ -115,6 +168,9 @@ def render_metrics(snapshot: Dict, *,
     w.scalar("latency_seconds_count", "counter",
              "Latency samples offered to the reservoir",
              snapshot["latency_seen"])
+    for name, state in sorted(
+            (snapshot.get("histograms") or {}).items()):
+        w.histogram(name, _HIST_HELP.get(name, name), state)
     w.scalar("launches_total", "counter",
              "Device launches issued (a mesh flush may group into "
              "1-2 sub-mesh launches)",
@@ -191,6 +247,20 @@ def render_metrics(snapshot: Dict, *,
                  [({"bucket_m": str(bm), "source": p.source},
                    1 if p.allow_fuse else 0) for bm, p in plans]
                  or [({}, 0)])
+    # -- trace plane: the span ring's own health -------------------------
+    if trace is not None:
+        w.scalar("trace_enabled", "gauge",
+                 "Whether the serving stack records spans",
+                 trace.get("enabled", 0))
+        w.scalar("trace_spans_recorded_total", "counter",
+                 "Ended spans committed to the ring",
+                 trace.get("spans_recorded", 0))
+        w.scalar("trace_spans_dropped_total", "counter",
+                 "Spans the bounded ring has already forgotten",
+                 trace.get("ring_dropped", 0))
+        w.scalar("trace_ring_len", "gauge",
+                 "Spans currently resident in the ring",
+                 trace.get("ring_len", 0))
     if quotas is not None:
         w.family("rpc_quota_admitted_total", "counter",
                  "LPs admitted by the per-tenant token bucket",
@@ -208,16 +278,71 @@ def render_metrics(snapshot: Dict, *,
 
 
 def validate_exposition(text: str) -> None:
-    """Cheap structural check of an exposition body (used by tests and
-    the bench): every non-comment line is ``name{labels} value`` with a
-    finite float value; raises ValueError otherwise."""
+    """Structural check of an exposition body (used by tests and the
+    bench): every non-comment line is ``name{labels} value`` with a
+    finite float value, optionally followed by an OpenMetrics exemplar
+    (`` # {labels} value``); and every family declared ``# TYPE ...
+    histogram`` obeys the histogram grammar — cumulative
+    non-decreasing ``_bucket`` counts with ``le`` labels, a terminal
+    ``le="+Inf"`` bucket, and ``_sum``/``_count`` lines with ``_count``
+    equal to the +Inf bucket.  Raises ValueError on any violation."""
+    hists: Dict[str, Dict] = {}
     for line in text.splitlines():
-        if not line or line.startswith("#"):
+        if not line:
             continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) >= 4 and parts[3] == "histogram":
+                hists[parts[2]] = {"last": None, "inf": None,
+                                   "sum": False, "count": None}
+            continue
+        if line.startswith("#"):
+            continue
+        sample, sep, exemplar = line.partition(" # ")
         try:
-            _, value = line.rsplit(" ", 1)
+            metric, value = sample.rsplit(" ", 1)
             v = float(value)
         except ValueError:
             raise ValueError(f"malformed sample line: {line!r}")
         if not math.isfinite(v):
             raise ValueError(f"non-finite sample value: {line!r}")
+        if sep:
+            ex = exemplar.strip()
+            head, brace, tail = ex.partition("}")
+            bad = (not ex.startswith("{") or not brace
+                   or not tail.strip())
+            if not bad:
+                try:
+                    ev = float(tail.strip().split()[0])
+                    bad = not math.isfinite(ev)
+                except ValueError:
+                    bad = True
+            if bad:
+                raise ValueError(f"malformed exemplar: {line!r}")
+        name = metric.split("{", 1)[0]
+        for base, st in hists.items():
+            if name == f"{base}_bucket":
+                if 'le="' not in metric:
+                    raise ValueError(
+                        f"histogram bucket without le label: {line!r}")
+                if st["last"] is not None and v < st["last"]:
+                    raise ValueError(
+                        f"non-cumulative histogram buckets: {line!r}")
+                st["last"] = v
+                if 'le="+Inf"' in metric:
+                    st["inf"] = v
+            elif name == f"{base}_sum":
+                st["sum"] = True
+            elif name == f"{base}_count":
+                st["count"] = v
+    for base, st in hists.items():
+        if st["inf"] is None:
+            raise ValueError(f"histogram {base} has no +Inf bucket")
+        if not st["sum"]:
+            raise ValueError(f"histogram {base} has no _sum line")
+        if st["count"] is None:
+            raise ValueError(f"histogram {base} has no _count line")
+        if st["count"] != st["inf"]:
+            raise ValueError(
+                f"histogram {base}: _count {st['count']} != +Inf "
+                f"bucket {st['inf']}")

@@ -28,10 +28,23 @@ Endpoints::
 
     POST /v1/solve   single {"A","b","c"} or batch {"problems":[...]}
                      headers: X-Tenant (quota key),
-                              X-Deadline-Ms (latency budget)
-    GET  /metrics    Prometheus text exposition
+                              X-Deadline-Ms (latency budget),
+                              X-Trace-Id (trace context, echoed back)
+    GET  /metrics    Prometheus text exposition (histograms + exemplars)
     GET  /healthz    process liveness (always 200 while serving)
     GET  /readyz     scheduler accepting work (503 once closed)
+    GET  /debug/trace[?trace_id=][&format=spans]
+                     Chrome trace_event JSON of the span ring (load it
+                     in Perfetto), optionally filtered to one trace
+    GET  /debug/flight[?name=]
+                     flight-recorder spool index / one snapshot body
+
+Tracing: a ``POST /v1/solve`` whose scheduler has an enabled tracer
+gets an ``rpc.handle`` span (accepting the caller's ``X-Trace-Id``
+context or minting a root one) and an ``admit`` child covering the
+admission pipeline; the scheduler then parents each per-LP ``request``
+span under the handle span.  The trace id is echoed on every solve
+response so clients can pull ``/debug/trace?trace_id=`` afterwards.
 """
 from __future__ import annotations
 
@@ -41,10 +54,15 @@ import json
 import math
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import urllib.parse
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.export import to_chrome_trace
+from repro.obs.trace import (TRACE_HEADER, new_trace_context,
+                             parse_trace_header, spans_for_trace,
+                             use_context)
 from repro.serve_lp.rpc.admission import (TENANT_HEADER, AdmissionPolicy,
                                           RpcError, check_backpressure,
                                           deadline_budget_s,
@@ -63,15 +81,21 @@ _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
 _MAX_HEADER_LINE = 16 << 10
 _MAX_HEADERS = 64
 
+# Lower-cased wire header for trace contexts (headers dict keys are
+# lower-cased by the parser).
+_TRACE_HDR = TRACE_HEADER.lower()
+
 
 @dataclasses.dataclass
 class Request:
-    """One parsed HTTP request (header keys lower-cased)."""
+    """One parsed HTTP request (header keys lower-cased; ``query``
+    holds the decoded query-string parameters, last value wins)."""
 
     method: str
     path: str
     headers: Dict[str, str]
     body: bytes = b""
+    query: Dict[str, str] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -177,6 +201,10 @@ class LPFrontend:
         self.counters = RpcCounters()
         self._dtype = np.dtype(scheduler.spec.dtype)
         self._started = False
+        # Observability plumbing rides on whatever the scheduler was
+        # built with — the RPC layer never owns a tracer of its own.
+        self._tracer = getattr(scheduler, "tracer", None)
+        self._recorder = getattr(scheduler, "recorder", None)
 
     # -- lifecycle --------------------------------------------------------
 
@@ -221,6 +249,10 @@ class LPFrontend:
             if self.ready:
                 return "readyz", text_response(200, "ready\n")
             return "readyz", text_response(503, "not ready\n")
+        if req.path == "/debug/trace":
+            return "debug_trace", self._debug_trace(req)
+        if req.path == "/debug/flight":
+            return "debug_flight", self._debug_flight(req)
         return "other", error_response(RpcError(
             404, "not_found", f"no route for {req.method} {req.path}"))
 
@@ -228,65 +260,125 @@ class LPFrontend:
 
     async def _solve(self, req: Request) -> Response:
         t0 = time.perf_counter()
+        tracer = self._tracer
+        ctx = hspan = None
+        tenant = req.headers.get(TENANT_HEADER, DEFAULT_TENANT)
+        if tracer is not None and tracer.enabled:
+            # Accept the caller's context (malformed values fall back
+            # to a fresh root — tracing never rejects a request).
+            ctx = (parse_trace_header(req.headers.get(_TRACE_HDR))
+                   or new_trace_context())
+            hspan = tracer.start_span(
+                "rpc.handle", ctx.trace_id, parent_id=ctx.span_id,
+                t_start=t0, endpoint="solve", tenant=tenant)
         self.counters.enter()
+        status: int = 500
+        code: Optional[str] = None
         try:
-            return await self._admit_and_solve(req, t0)
+            with use_context(
+                    trace_id=(ctx.trace_id if ctx is not None else None),
+                    span_id=(hspan.span_id if hspan is not None
+                             else None),
+                    tenant=tenant):
+                resp = await self._admit_and_solve(req, t0, ctx, hspan)
+            status = resp.status
         except RpcError as e:
             if e.status in (429, 504):
                 self.counters.record_shed(e.code)
-            return error_response(e)
+            if e.status == 504 and self._recorder is not None:
+                # An SLO violation (missed deadline) is a flight-
+                # recorder trigger: capture the queue/flush state that
+                # made the budget impossible.
+                self._recorder.trigger(f"slo:{e.code}")
+            status, code = e.status, e.code
+            resp = error_response(e)
         except Exception as e:   # never leak internals to the wire
             self.scheduler.metrics.record_error(
                 "rpc_internal",
                 warn=f"serve_lp.rpc: internal error handling a "
                      f"request ({e!r})")
-            return error_response(RpcError(
+            status, code = 500, "internal"
+            resp = error_response(RpcError(
                 500, "internal", "internal server error"))
         finally:
             self.counters.exit()
+        if tracer is not None:
+            if code is not None:
+                tracer.end(hspan, status=status, code=code)
+            else:
+                tracer.end(hspan, status=status)
+        if ctx is not None:
+            # Echo the trace id so the client can pull
+            # /debug/trace?trace_id= for this exact request.
+            resp.headers.setdefault(TRACE_HEADER, ctx.trace_id)
+        return resp
 
-    async def _admit_and_solve(self, req: Request,
-                               t0: float) -> Response:
+    async def _admit_and_solve(
+            self, req: Request, t0: float,
+            ctx=None, hspan=None) -> Response:
         policy = self.policy
-        # 1. validation — typed 4xx before any scheduler state moves.
-        problems, is_batch = parse_solve_payload(
-            req.body, self._dtype, policy)
-        payload_deadline = None
-        if b"deadline_ms" in req.body:
-            try:   # only re-parse when the field can exist
-                payload_deadline = json.loads(req.body).get("deadline_ms")
-            except ValueError:
-                payload_deadline = None
-        # 2. deadline — an already-expired budget is rejected, not solved.
-        budget = deadline_budget_s(req.headers, payload_deadline, policy)
-        # 3. backpressure — shed instead of queueing unboundedly.
-        # Before quota: a request the server is about to 429/503
-        # anyway must not also cost the tenant tokens.
-        check_backpressure(self.scheduler, policy)
-        if not self.ready:
-            raise RpcError(503, "not_ready",
-                           "scheduler is not accepting work")
-        # 4. quota — per-tenant token bucket, priced Retry-After.
-        tenant = req.headers.get(TENANT_HEADER, DEFAULT_TENANT)
-        retry = self.quotas.admit(tenant, cost=float(len(problems)))
-        if retry == math.inf:
-            raise RpcError(
-                413, "batch_exceeds_burst",
-                f"{len(problems)} LPs exceeds tenant {tenant!r}'s "
-                "burst allowance; split the batch")
-        if retry > 0.0:
-            raise RpcError(
-                429, "quota_exhausted",
-                f"tenant {tenant!r} is over its rate quota",
-                retry_after_s=retry)
+        tracer = self._tracer
+        aspan = None
+        if ctx is not None:
+            aspan = tracer.start_span(
+                "admit", ctx.trace_id,
+                parent_id=(hspan.span_id if hspan is not None
+                           else ctx.span_id),
+                t_start=t0)
+        try:
+            # 1. validation — typed 4xx before any scheduler state
+            # moves.
+            problems, is_batch = parse_solve_payload(
+                req.body, self._dtype, policy)
+            payload_deadline = None
+            if b"deadline_ms" in req.body:
+                try:   # only re-parse when the field can exist
+                    payload_deadline = json.loads(
+                        req.body).get("deadline_ms")
+                except ValueError:
+                    payload_deadline = None
+            # 2. deadline — an already-expired budget is rejected, not
+            # solved.
+            budget = deadline_budget_s(
+                req.headers, payload_deadline, policy)
+            # 3. backpressure — shed instead of queueing unboundedly.
+            # Before quota: a request the server is about to 429/503
+            # anyway must not also cost the tenant tokens.
+            check_backpressure(self.scheduler, policy)
+            if not self.ready:
+                raise RpcError(503, "not_ready",
+                               "scheduler is not accepting work")
+            # 4. quota — per-tenant token bucket, priced Retry-After.
+            tenant = req.headers.get(TENANT_HEADER, DEFAULT_TENANT)
+            retry = self.quotas.admit(tenant, cost=float(len(problems)))
+            if retry == math.inf:
+                raise RpcError(
+                    413, "batch_exceeds_burst",
+                    f"{len(problems)} LPs exceeds tenant {tenant!r}'s "
+                    "burst allowance; split the batch")
+            if retry > 0.0:
+                raise RpcError(
+                    429, "quota_exhausted",
+                    f"tenant {tenant!r} is over its rate quota",
+                    retry_after_s=retry)
+        except RpcError as e:
+            if tracer is not None:
+                tracer.end(aspan, rejected=e.code)
+            raise
+        if tracer is not None:
+            tracer.end(aspan, n_lps=len(problems))
         # 5. submit — in the executor: an inline size-triggered flush
         # can block on the max_inflight condition variable, and that
         # must never stall the event loop.
         loop = asyncio.get_running_loop()
         sched = self.scheduler
+        # Per-LP request spans parent under the rpc.handle span.
+        sub_ctx = (ctx.child_of(hspan.span_id)
+                   if ctx is not None and hspan is not None else ctx)
 
         def _submit_all():
-            return [sched.submit(A, b, c) for A, b, c in problems]
+            return [sched.submit(A, b, c, trace=sub_ctx)
+                    for A, b, c in problems]
 
         try:
             futures = await loop.run_in_executor(None, _submit_all)
@@ -343,12 +435,55 @@ class LPFrontend:
     def _metrics(self) -> Response:
         snap = self.scheduler.metrics.snapshot(
             self.scheduler.cache.stats())
+        tracer = self._tracer
         text = render_metrics(
             snap, rpc=self.counters.snapshot(),
             quotas=self.quotas.snapshot(),
-            slo=self.slo.plans() if self.slo is not None else None)
+            slo=self.slo.plans() if self.slo is not None else None,
+            trace=(tracer.stats() if tracer is not None else None))
         return Response(200, text.encode("utf-8"),
                         content_type=CONTENT_TYPE)
+
+    def _debug_trace(self, req: Request) -> Response:
+        """The span ring as Chrome trace_event JSON (Perfetto-loadable)
+        or raw span dicts (``format=spans``), optionally filtered to
+        one trace id."""
+        tracer = self._tracer
+        if tracer is None or not tracer.enabled:
+            return error_response(RpcError(
+                404, "tracing_disabled",
+                "the scheduler was built without an enabled tracer; "
+                "start the server with --trace"))
+        spans = tracer.spans()
+        trace_id = req.query.get("trace_id")
+        if trace_id:
+            spans = spans_for_trace(spans, trace_id.strip().lower())
+        if req.query.get("format") == "spans":
+            return json_response(200, {
+                "spans": [s.to_dict() for s in spans],
+                "ring": tracer.stats()})
+        return json_response(200, to_chrome_trace(spans))
+
+    def _debug_flight(self, req: Request) -> Response:
+        """Flight-recorder spool: the index (with recorder stats), or
+        one snapshot body via ``?name=``."""
+        rec = self._recorder
+        if rec is None:
+            return error_response(RpcError(
+                404, "flight_recorder_disabled",
+                "no flight recorder configured; start the server with "
+                "--flight-spool"))
+        name = req.query.get("name")
+        if name:
+            snap = rec.load_snapshot(name)
+            if snap is None:
+                return error_response(RpcError(
+                    404, "snapshot_not_found",
+                    f"no spool snapshot named {name!r}"))
+            return json_response(200, snap)
+        return json_response(200, {
+            "snapshots": rec.list_snapshots(),
+            "recorder": rec.stats()})
 
 
 # -- the HTTP/1.1 byte layer ----------------------------------------------
@@ -408,8 +543,10 @@ async def _read_request(reader: asyncio.StreamReader,
         raise RpcError(400, "bad_request",
                        "chunked bodies are not supported; send "
                        "Content-Length")
-    return Request(method=method.upper(), path=path.split("?", 1)[0],
-                   headers=headers, body=body)
+    path, _, qs = path.partition("?")
+    query = dict(urllib.parse.parse_qsl(qs)) if qs else {}
+    return Request(method=method.upper(), path=path,
+                   headers=headers, body=body, query=query)
 
 
 class RpcServer:
@@ -533,14 +670,18 @@ def make_frontend(spec=None, *,
                   policy: Optional[AdmissionPolicy] = None,
                   quotas: Optional[QuotaManager] = None,
                   target_p99_s: Optional[float] = None,
-                  metrics=None) -> LPFrontend:
+                  metrics=None,
+                  tracer=None,
+                  recorder=None) -> LPFrontend:
     """Build scheduler + admission + quota + SLO in one call — the
     shared construction path of ``__main__``, the bench's ``--rpc``
-    mode, and tests."""
+    mode, and tests.  ``tracer``/``recorder`` are handed to the
+    scheduler; the frontend picks them up from there."""
     from repro.serve_lp.scheduler import BatchScheduler
     scheduler = BatchScheduler(
         spec, max_batch=max_batch, max_wait_s=max_wait_s,
-        max_inflight=max_inflight, pipeline=pipeline, metrics=metrics)
+        max_inflight=max_inflight, pipeline=pipeline, metrics=metrics,
+        tracer=tracer, recorder=recorder)
     slo = (SLOController(target_p99_s)
            if target_p99_s is not None else None)
     return LPFrontend(scheduler, policy=policy, quotas=quotas, slo=slo)

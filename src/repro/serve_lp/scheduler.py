@@ -87,6 +87,10 @@ import numpy as np
 
 from repro.core.lp import PAD_B
 from repro.kernels.batch_lp import LANE
+from repro.obs.profiler import annotation as _device_annotation
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import (NOOP_TRACER, TraceContext, Tracer,
+                             new_trace_context)
 from repro.serve_lp.buckets import (SHARDING_MODES, ExecSpec,
                                     ExecutableCache, bucket_batch, bucket_m)
 from repro.serve_lp.metrics import ServeMetrics
@@ -163,6 +167,7 @@ class _FlushBufferPool:
         self._max_per_key = max_per_key
         self.alloc_count = 0   # fresh allocations (tests assert reuse)
         self.lease_count = 0
+        self.release_count = 0  # lease_count - release_count = leased now
 
     def lease(self, b_pad: int, bm: int, dtype: np.dtype
               ) -> Tuple[tuple, tuple]:
@@ -193,6 +198,7 @@ class _FlushBufferPool:
     def release(self, key: tuple, bufs: tuple) -> None:
         """Return a leased set once its flush has fully completed."""
         with self._lock:
+            self.release_count += 1
             stack = self._free.setdefault(key, [])
             if len(stack) < self._max_per_key:
                 stack.append(bufs)
@@ -223,6 +229,13 @@ class _Pending:
     m: int
     future: Future
     t_submit: float
+    # Tracing (None when the scheduler's tracer is disabled): the
+    # request's context, its open "request" span, and its open
+    # "queue.wait" span.  Open spans are nulled once ended so no path
+    # can commit one to the ring twice.
+    trace: Optional[TraceContext] = None
+    span: Any = None
+    qspan: Any = None
 
 
 @dataclasses.dataclass
@@ -248,6 +261,11 @@ class _InflightFlush:
     t_complete: float = 0.0      # device results materialized on host
     handle: Any = None           # in-flight device result handle
     counted: bool = False        # holds an in-flight slot (pipelined)
+    # Tracing: flush-plane spans are emitted once per flush under the
+    # *primary* trace (the first member request's); membership of every
+    # fused-in trace rides on the flush.assemble span's trace_ids attr.
+    trace_id: Optional[str] = None
+    asm_span: Any = None         # the flush.assemble span (parent link)
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
 
@@ -298,6 +316,17 @@ class BatchScheduler:
         never fuse buckets whose ``m_pad`` differ by more than this
         factor — fusing an m=8 bucket into an m=4096 flush would burn
         more pad cells than the saved launch is worth.
+    tracer:
+        a :class:`repro.obs.Tracer` to emit typed spans into (request,
+        queue.wait, flush.assemble/dispatch/scatter, device.solve per
+        launch group).  Default is the shared disabled tracer — the
+        untraced hot path costs one no-op counter bump per call site
+        and records zero spans.
+    recorder:
+        a :class:`repro.obs.FlightRecorder`; when given, the scheduler
+        binds :meth:`debug_state` as its state source, shares its
+        tracer, and wires ``ServeMetrics.record_error`` plus a
+        debounced post-flush p99 check to its triggers.
     """
 
     def __init__(
@@ -319,6 +348,8 @@ class BatchScheduler:
         sharding: str = "mesh",
         fuse: Optional[bool] = None,
         fuse_max_m_ratio: float = 8.0,
+        tracer: Optional[Tracer] = None,
+        recorder: Optional[FlightRecorder] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} < 1")
@@ -378,6 +409,19 @@ class BatchScheduler:
         self._devices = (list(devices) if devices is not None
                          else jax.devices())
         self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.tracer = tracer if tracer is not None else NOOP_TRACER
+        if self.tracer.annotate_device:
+            # Also label each mesh launch group inside dispatch, so an
+            # active jax profiler session shows per-launch regions that
+            # match the host device.solve spans.
+            from repro.serve_lp import sharding as _sharding_mod
+            _sharding_mod.set_launch_annotations(True)
+        self.recorder = recorder
+        if recorder is not None:
+            recorder.bind_state(self.debug_state)
+            if recorder.tracer is None:
+                recorder.tracer = self.tracer
+            self.metrics.set_error_hook(recorder.on_error)
         self.cache = ExecutableCache(
             lambda s: build_executable(s, self._devices))
         self.buffers = _FlushBufferPool()
@@ -526,6 +570,45 @@ class BatchScheduler:
                           if q), default=None)
         return 0.0 if oldest is None else max(0.0, now - oldest)
 
+    def debug_state(self) -> Dict[str, Any]:
+        """One JSON-serializable picture of the scheduler right now —
+        what the flight recorder snapshots next to the span ring: queue
+        depths per bucket, pipeline counters, buffer-pool leases, and
+        the full metrics snapshot (per-device row counts included)."""
+        now = time.perf_counter()
+        with self._lock:
+            queues = {int(bm): len(q)
+                      for bm, q in self._queues.items() if q}
+            oldest = min((q[0].t_submit
+                          for q in self._queues.values() if q),
+                         default=None)
+            closed = self._closed
+        with self._inflight_cv:
+            active = self._active
+            inflight = self._inflight
+        bp = self.buffers
+        return {
+            "queues": queues,
+            "pending": sum(queues.values()),
+            "queue_age_s": (0.0 if oldest is None
+                            else max(0.0, now - oldest)),
+            "closed": closed,
+            "active_flushes": active,
+            "inflight": inflight,
+            "max_inflight": self.max_inflight,
+            "pipeline": self.pipeline,
+            "sharding": self.sharding,
+            "fuse": self.fuse,
+            "n_devices": len(self._devices),
+            "buffer_pool": {
+                "alloc_count": bp.alloc_count,
+                "lease_count": bp.lease_count,
+                "release_count": bp.release_count,
+                "leased_now": bp.lease_count - bp.release_count,
+            },
+            "metrics": self.metrics.snapshot(self.cache.stats()),
+        }
+
     def _pin_for_bucket(self, bm: int, batch: int) -> SolverSpec:
         """The fully shape-resolved spec one bucket's flush runs with:
         explicit spec values win, then the measured tuning table at
@@ -535,10 +618,17 @@ class BatchScheduler:
 
     # -- submission ------------------------------------------------------
 
-    def submit(self, A, b, c) -> Future:
+    def submit(self, A, b, c, *,
+               trace: Optional[TraceContext] = None) -> Future:
         """Submit one LP (A (m,2), b (m,), c (2,)); returns a Future
         resolving to :class:`LPResult`.  Buffers are kept at the spec's
-        dtype and pre-split into packed rows."""
+        dtype and pre-split into packed rows.
+
+        ``trace`` propagates an upstream :class:`TraceContext` (the RPC
+        layer's parsed ``X-Trace-Id``); when the scheduler's tracer is
+        enabled and none is given, a fresh root context is generated
+        here, so every traced request has a full span chain either
+        way."""
         dt = self._dtype
         A = np.asarray(A, dt).reshape(-1, 2)
         m = A.shape[0]
@@ -552,6 +642,17 @@ class BatchScheduler:
                        b=b, c=c, m=m, future=fut,
                        t_submit=time.perf_counter())
         bm = bucket_m(m, base=self.bucket_base)
+        tracer = self.tracer
+        if tracer.enabled:
+            ctx = trace if trace is not None else new_trace_context()
+            req.trace = ctx
+            req.span = tracer.start_span(
+                "request", ctx.trace_id, parent_id=ctx.span_id,
+                t_start=req.t_submit, bucket_m=bm, m=m)
+            req.qspan = tracer.start_span(
+                "queue.wait", ctx.trace_id,
+                parent_id=req.span.span_id,
+                t_start=req.t_submit, bucket_m=bm)
         self.metrics.touch_clock()
         ready = None
         fused = None
@@ -825,10 +926,17 @@ class BatchScheduler:
         (``set_running_or_notify_cancel``) so a later ``cancel()`` from
         another thread returns False instead of racing the completion
         scatter."""
+        tracer = self.tracer
         live: List[Tuple[int, List[_Pending]]] = []
         for bm_i, q in parts:
-            kept = [r for r in q
-                    if r.future.set_running_or_notify_cancel()]
+            kept: List[_Pending] = []
+            for r in q:
+                if r.future.set_running_or_notify_cancel():
+                    kept.append(r)
+                else:
+                    tracer.end(r.qspan, cancelled=True)
+                    tracer.end(r.span, cancelled=True)
+                    r.qspan = r.span = None
             if kept:
                 live.append((bm_i, kept))
         if not live:
@@ -852,6 +960,9 @@ class BatchScheduler:
                 self._inflight_cv.notify_all()
             for r in reqs:
                 _try_set_exception(r.future, e)
+                tracer.end(r.qspan, error=type(e).__name__)
+                tracer.end(r.span, error=type(e).__name__)
+                r.qspan = r.span = None
             raise
         if not self.pipeline:
             err = self._complete_unit(unit)
@@ -870,7 +981,36 @@ class BatchScheduler:
         spec = ExecSpec(bucket_m=bm, b_pad=b_pad, solver=pinned,
                         n_devices=len(self._devices),
                         sharding=self.sharding)
+        # The flush is named before any work so its queue.wait /
+        # flush.* spans can carry the name from the start.
+        with self._lock:
+            self._flush_seq += 1
+            seq = self._flush_seq
+        name = f"flush-{seq} m{bm}xb{b_pad}"
         t0 = time.perf_counter()
+        tracer = self.tracer
+        trace_id = None
+        asm_span = None
+        if tracer.enabled:
+            primary = next(
+                (r for r in reqs if r.trace is not None), None)
+            if primary is not None:
+                trace_id = primary.trace.trace_id
+                asm_span = tracer.start_span(
+                    "flush.assemble", trace_id,
+                    parent_id=(primary.span.span_id
+                               if primary.span is not None else None),
+                    t_start=t0, flush=name, bucket_m=bm, b_pad=b_pad,
+                    n_real=B, n_buckets=n_buckets, reason=reason,
+                    trace_ids=tuple(r.trace.trace_id for r in reqs
+                                    if r.trace is not None))
+            for r in reqs:
+                tracer.end(r.qspan, t_end=t0, flush=name)
+                r.qspan = None
+        self.metrics.record_queue_waits(
+            [(t0 - r.t_submit,
+              r.trace.trace_id if r.trace is not None else None)
+             for r in reqs])
         key, bufs = self.buffers.lease(b_pad, bm, self._dtype)
         try:
             L, c, mv = bufs
@@ -884,18 +1024,27 @@ class BatchScheduler:
         except Exception:
             self.buffers.release(key, bufs)
             raise
-        with self._lock:
-            self._flush_seq += 1
-            seq = self._flush_seq
+        tracer.end(asm_span)
         return _InflightFlush(
-            name=f"flush-{seq} m{bm}xb{b_pad}", bucket_m=bm, b_pad=b_pad,
+            name=name, bucket_m=bm, b_pad=b_pad,
             reqs=reqs, reason=reason, exe=exe, buf_key=key, bufs=bufs,
-            t_assemble=t0, n_buckets=n_buckets)
+            t_assemble=t0, n_buckets=n_buckets,
+            trace_id=trace_id, asm_span=asm_span)
 
     def _dispatch(self, unit: _InflightFlush) -> None:
         """Async stage: reserve an in-flight slot (backpressure — blocks
         while ``max_inflight`` flushes are in flight), enqueue the solve
         on the device and hand the unit to the completion worker."""
+        tracer = self.tracer
+        dspan = None
+        if tracer.enabled and unit.trace_id is not None:
+            # Covers backpressure wait + the async dispatch call; the
+            # device.solve span then starts where this one ends.
+            dspan = tracer.start_span(
+                "flush.dispatch", unit.trace_id,
+                parent_id=(unit.asm_span.span_id
+                           if unit.asm_span is not None else None),
+                flush=unit.name, bucket_m=unit.bucket_m)
         if self.pipeline:
             with self._inflight_cv:
                 self._inflight_cv.wait_for(
@@ -904,12 +1053,18 @@ class BatchScheduler:
                 unit.counted = True
         L, c, mv = unit.bufs
         try:
-            unit.handle = unit.exe.dispatch(L, c, mv)
+            if tracer.annotate_device:
+                with _device_annotation(unit.name):
+                    unit.handle = unit.exe.dispatch(L, c, mv)
+            else:
+                unit.handle = unit.exe.dispatch(L, c, mv)
         except Exception:
             self._release_slot(unit)
             self.buffers.release(unit.buf_key, unit.bufs)
             raise
         unit.t_dispatch = time.perf_counter()
+        tracer.end(dspan, t_end=unit.t_dispatch,
+                   launches=getattr(unit.exe, "n_launches", 1))
         self.metrics.record_dispatch()
         if self.pipeline:
             self._ensure_completer()
@@ -976,7 +1131,30 @@ class BatchScheduler:
             self._active -= 1
             self._inflight_cv.notify_all()
         self.metrics.record_complete()
+        tracer = self.tracer
+        traced = tracer.enabled and unit.trace_id is not None
+        parent = (unit.asm_span.span_id
+                  if unit.asm_span is not None else None)
+        sspan = None
+        if traced:
+            # One device.solve span per launch group, reconstructed
+            # from the host-observed dispatch -> complete window (the
+            # device service interval the union/idle math runs on).
+            self._record_device_spans(unit, parent)
+            sspan = tracer.start_span(
+                "flush.scatter", unit.trace_id, parent_id=parent,
+                t_start=unit.t_complete, flush=unit.name,
+                bucket_m=unit.bucket_m)
         if err is not None:
+            # Order matters: commit the errored spans, fire the flight
+            # recorder (via the record_error hook) so its snapshot holds
+            # them as evidence, and only then settle the futures — a
+            # caller woken by its future sees evidence fully captured.
+            for r in unit.reqs:
+                tracer.end(r.span, error=type(err).__name__,
+                           flush=unit.name)
+                r.span = None
+            tracer.end(sspan, error=type(err).__name__)
             if self.pipeline:
                 self.metrics.record_error(
                     "solve",
@@ -997,7 +1175,10 @@ class BatchScheduler:
         # flush.
         for r in unit.reqs:
             if not r.future.done():
-                self.metrics.record_latency(now - r.t_submit)
+                self.metrics.record_latency(
+                    now - r.t_submit,
+                    trace_id=(r.trace.trace_id
+                              if r.trace is not None else None))
         self.metrics.record_flush(
             n_real=B, b_pad=unit.b_pad, bucket_m=unit.bucket_m,
             sum_m=sum(r.m for r in unit.reqs),
@@ -1006,9 +1187,16 @@ class BatchScheduler:
             reason=unit.reason,
             n_buckets=unit.n_buckets,
             launches=getattr(unit.exe, "n_launches", 1),
-            shards=getattr(unit.exe, "shards", ()))
+            shards=getattr(unit.exe, "shards", ()),
+            trace_id=unit.trace_id)
+        if self.recorder is not None:
+            self.recorder.maybe_check_p99(
+                lambda: self.metrics.percentile(99.0))
         for i, r in enumerate(unit.reqs):
             if r.future.done():
+                tracer.end(r.span, t_end=now, flush=unit.name,
+                           dropped=True)
+                r.span = None
                 continue
             xi = np.asarray(x[i])
             _try_set_result(r.future, LPResult(
@@ -1020,5 +1208,38 @@ class BatchScheduler:
                 batch_size=B,
                 latency_s=now - r.t_submit,
             ))
+            tracer.end(r.span, t_end=now, flush=unit.name,
+                       feasible=bool(feas[i]))
+            r.span = None
+        tracer.end(sspan)
         unit.done.set()
         return None
+
+    def _record_device_spans(self, unit: _InflightFlush,
+                             parent: Optional[str]) -> None:
+        """Emit per-launch-group ``device.solve`` spans for one
+        completed flush: mesh executables get one span per
+        :class:`~repro.serve_lp.mesh_layout.LaunchGroup` (its device
+        indices and row geometry as attrs); pmap/jit fallbacks get a
+        single span over every participating device."""
+        layout = getattr(unit.exe, "layout", None)
+        groups = getattr(layout, "groups", ()) if layout is not None \
+            else ()
+        if groups:
+            for g in groups:
+                self.tracer.record(
+                    "device.solve", unit.trace_id, parent,
+                    unit.t_dispatch, unit.t_complete,
+                    flush=unit.name, bucket_m=unit.bucket_m,
+                    devices=g.device_indices,
+                    rows_per_device=g.rows_per_device, rows=g.rows)
+            return
+        shards = tuple(getattr(unit.exe, "shards", ()) or ())
+        devices = (tuple(i for i, s in enumerate(shards) if s)
+                   or tuple(range(len(self._devices))))
+        self.tracer.record(
+            "device.solve", unit.trace_id, parent,
+            unit.t_dispatch, unit.t_complete,
+            flush=unit.name, bucket_m=unit.bucket_m,
+            devices=devices,
+            rows=int(sum(shards)) if shards else unit.b_pad)

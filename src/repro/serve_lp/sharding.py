@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.packed import PackedLPBatch
 from repro.core.lp import PAD_B
+from repro.obs.profiler import annotation as _device_annotation
 from repro.serve_lp.buckets import ExecSpec
 from repro.serve_lp.mesh_layout import (
     DATA_AXIS,
@@ -66,6 +67,21 @@ from repro.solver import solve_with_spec
 # ignores it (with a "donated buffers were not usable" warning), so
 # donation is gated to keep test/CI logs clean.
 _DONATING_PLATFORMS = ("gpu", "tpu", "cuda", "rocm")
+
+# Opt-in per-launch jax.profiler.TraceAnnotation around each mesh
+# launch-group dispatch, so device-profiler timelines carry the same
+# launch labels as the host-side device.solve spans.  Off by default:
+# the annotation context costs a little per launch and is only useful
+# under an active profiler session.
+_ANNOTATE_LAUNCHES = False
+
+
+def set_launch_annotations(enabled: bool) -> None:
+    """Enable/disable per-launch-group profiler annotations (the
+    scheduler flips this on when its tracer was built with
+    ``annotate_device=True``)."""
+    global _ANNOTATE_LAUNCHES
+    _ANNOTATE_LAUNCHES = bool(enabled)
 
 
 def _make_solve(spec: ExecSpec) -> Callable:
@@ -187,10 +203,19 @@ def _build_mesh_executable(spec: ExecSpec, devices, solve,
         launches.append((g.offset, g.rows, fn))
 
     b_pad = spec.b_pad
+    labels = tuple(
+        f"launch d{g.start}+{g.n_devices} rows{g.rows} m{spec.bucket_m}"
+        for g in layout.groups)
 
     def dispatch(L, c, mv):
         if L.shape[0] != layout.b_pad:
             L, c, mv = _pad_rows(L, c, mv, layout.b_pad)
+        if _ANNOTATE_LAUNCHES:
+            out = []
+            for (o, n, fn), label in zip(launches, labels):
+                with _device_annotation(label):
+                    out.append(fn(L[o:o + n], c[o:o + n], mv[o:o + n]))
+            return tuple(out)
         return tuple(fn(L[o:o + n], c[o:o + n], mv[o:o + n])
                      for o, n, fn in launches)
 
